@@ -1,0 +1,262 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+  adjoint_table    paper §3 Eq. 13 "Implementation" validation: rel-err of
+                   every primitive's adjoint (the paper's correctness table)
+  lenet_equiv      paper §5: sequential vs distributed LeNet-5 accuracy
+  table1           paper App. C Table 1: per-worker parameter shapes
+  halo_appendix_b  paper App. B: halo geometries for figures B2-B5
+  prim_micro       data-movement primitive microbenchmarks (us/call)
+  layer_micro      distributed layer microbenchmarks (us/call)
+  train_micro      end-to-end small-LM train-step timing (us/step)
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--only adjoint_table,...]
+(uses 8 host devices; sets XLA_FLAGS when unset)
+"""
+
+import argparse
+import os
+import sys
+import time
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+ROWS = []
+
+
+def emit(name, us, derived=""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timeit(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def mesh1d():
+    return jax.make_mesh((8,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def mesh2d():
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# ---------------------------------------------------------------------------
+
+def bench_adjoint_table():
+    """Paper §3 Eq. 13: the adjoint-coherence table for every primitive."""
+    from repro.core import adjoint_test, primitives as prim
+    m = mesh1d()
+    key = jax.random.PRNGKey(0)
+    cases = {
+        "sum_reduce": (prim.smap(lambda x: prim.sum_reduce(x, "model"),
+                                 m, P("model"), P()), (16, 8)),
+        "all_reduce": (prim.smap(lambda x: prim.all_reduce(x, "model"),
+                                 m, P("model"), P("model")), (8, 8)),
+        "all_gather": (prim.smap(
+            lambda x: prim.all_gather(x, "model", 0)
+            * (jax.lax.axis_index("model") + 1.0), m, P("model"), P("model")),
+            (16, 4)),
+        "reduce_scatter": (prim.smap(
+            lambda x: prim.reduce_scatter(x, "model", 0),
+            m, P(None, "model"), P("model", None)), (16, 40)),
+        "all_to_all": (prim.smap(lambda x: prim.all_to_all(x, "model", 1, 0),
+                                 m, P("model", None), P(None, "model")),
+                       (8, 8, 4)),
+        "send_recv": (prim.smap(lambda x: prim.send_recv(x, "model", 1),
+                                m, P("model"), P("model")), (16, 2)),
+        "halo_exchange": (prim.smap(
+            lambda x: prim.halo_exchange(x, "model", 0, 2, 1),
+            m, P("model"), P("model")), (32, 3)),
+    }
+    for name, (f, shape) in cases.items():
+        x = jax.random.normal(jax.random.fold_in(key, hash(name) % 2**31),
+                              shape)
+        r = adjoint_test(f, x, name=name)
+        us = timeit(f, x)
+        emit(f"adjoint_table/{name}", us,
+             f"rel_err={r.rel_err:.2e};pass={r.passed}")
+        assert r.passed, name
+
+
+def bench_lenet_equiv():
+    """Paper §5: sequential vs distributed LeNet-5 (synthetic MNIST)."""
+    from repro.models.lenet import (lenet_apply_distributed,
+                                    lenet_apply_sequential, lenet_init,
+                                    synthetic_mnist)
+    mesh = jax.make_mesh((2, 2), ("fo", "fi"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    key = jax.random.PRNGKey(0)
+    params_d = lenet_init(key)
+    params_s = jax.tree_util.tree_map(jnp.copy, params_d)
+    xtr, ytr = synthetic_mnist(jax.random.fold_in(key, 1), 2048)
+    xte, yte = synthetic_mnist(jax.random.fold_in(key, 2), 512)
+
+    def xent(logits, y):
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y])
+
+    @jax.jit
+    def sd(p, x, y):
+        l, g = jax.value_and_grad(
+            lambda p: xent(lenet_apply_distributed(mesh, p, x), y))(p)
+        return l, jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g)
+
+    @jax.jit
+    def ss(p, x, y):
+        l, g = jax.value_and_grad(
+            lambda p: xent(lenet_apply_sequential(p, x), y))(p)
+        return l, jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g)
+
+    bs = 64
+    t0 = time.perf_counter()
+    for i in range(40):
+        lo = (i * bs) % (xtr.shape[0] - bs)
+        _, params_d = sd(params_d, xtr[lo:lo + bs], ytr[lo:lo + bs])
+        _, params_s = ss(params_s, xtr[lo:lo + bs], ytr[lo:lo + bs])
+    dt = (time.perf_counter() - t0) / 40 * 1e6
+    acc_d = float((jnp.argmax(lenet_apply_distributed(mesh, params_d, xte), -1) == yte).mean())
+    acc_s = float((jnp.argmax(lenet_apply_sequential(params_s, xte), -1) == yte).mean())
+    emit("lenet_equiv/train_step_pair", dt,
+         f"acc_dist={acc_d:.4f};acc_seq={acc_s:.4f};delta={abs(acc_d-acc_s):.4f}")
+    assert abs(acc_d - acc_s) < 0.02
+
+
+def bench_table1():
+    from repro.models.lenet import table1_local_shapes
+    t = table1_local_shapes((2, 2))
+    emit("table1/shapes", 0.0,
+         ";".join(f"{k}={v}" for k, v in t.items()) + ";paper=(60,200)(42,60)(5,42)")
+
+
+def bench_halo_appendix_b():
+    from repro.core.partition import compute_halos
+    t0 = time.perf_counter()
+    b2 = compute_halos(11, 3, 5, padding=2)
+    b3 = compute_halos(11, 3, 5)
+    b5 = compute_halos(20, 6, 2, stride=2)
+    us = (time.perf_counter() - t0) * 1e6 / 3
+    emit("halo_appendix_b/B2", us,
+         "halos=" + str([(s.left_halo, s.right_halo) for s in b2]))
+    emit("halo_appendix_b/B3", us,
+         "halos=" + str([(s.left_halo, s.right_halo) for s in b3]))
+    emit("halo_appendix_b/B5", us,
+         "halos=" + str([(s.left_halo, s.right_halo) for s in b5])
+         + ";unused=" + str([(s.left_unused, s.right_unused) for s in b5]))
+
+
+def bench_prim_micro():
+    from repro.core import primitives as prim
+    m = mesh1d()
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024, 1024))
+    cases = {
+        "all_gather": prim.smap(lambda x: prim.all_gather(x, "model", 0),
+                                m, P("model"), P("model", None)),
+        "reduce_scatter": prim.smap(
+            lambda x: prim.reduce_scatter(x, "model", 0),
+            m, P(None, "model"), P("model", None)),
+        "all_to_all": prim.smap(lambda x: prim.all_to_all(x, "model", 1, 0),
+                                m, P("model"), P(None, "model")),
+        "halo_exchange": prim.smap(
+            lambda x: prim.halo_exchange(x, "model", 0, 8, 8),
+            m, P("model"), P("model")),
+    }
+    for name, f in cases.items():
+        jf = jax.jit(f)
+        us = timeit(jf, x)
+        gb = x.size * 4 / 1e9
+        emit(f"prim_micro/{name}", us, f"GB_moved~{gb:.3f}")
+
+
+def bench_layer_micro():
+    from repro.core import layers as L
+    m2 = mesh2d()
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 512))
+    w = jax.random.normal(jax.random.PRNGKey(1), (1024, 512))
+    f = jax.jit(lambda x, w: L.dist_affine(m2, x, w, None, fo_axis="data",
+                                           fi_axis="model"))
+    us = timeit(f, x, w)
+    flops = 2 * 32 * 512 * 1024
+    emit("layer_micro/dist_affine", us, f"GFLOP/s={flops/us/1e3:.2f}")
+
+    from repro.core import overlap, primitives as prim
+    m1 = mesh1d()
+    xr = jax.random.normal(jax.random.PRNGKey(2), (64, 1024))
+    wr = jax.random.normal(jax.random.PRNGKey(3), (1024, 512))
+    ring = jax.jit(prim.smap(
+        lambda x, w: overlap.ring_allgather_matmul(x, w, "model"),
+        m1, (P(None, "model"), P(None, "model")), P(None, "model")))
+    unf = jax.jit(prim.smap(
+        lambda x, w: prim.all_gather(x, "model", 1) @ w,
+        m1, (P(None, "model"), P(None, "model")), P(None, "model")))
+    us_ring = timeit(ring, xr, wr)
+    us_unf = timeit(unf, xr, wr)
+    emit("layer_micro/ring_ag_matmul", us_ring, f"unfused_us={us_unf:.1f}")
+
+
+def bench_train_micro():
+    from repro.configs import ModelConfig
+    from repro.data import DataConfig, SyntheticLM
+    from repro.optim import make_optimizer
+    from repro.train import build_train_step, init_train_state
+    from repro.models import init_params
+    cfg = ModelConfig(name="micro", family="dense", num_layers=4,
+                      d_model=256, num_heads=8, num_kv_heads=4, head_dim=32,
+                      d_ff=512, vocab_size=1024, dtype="float32",
+                      remat=False, attn_chunk=64)
+    data = SyntheticLM(DataConfig(vocab_size=1024, seq_len=128,
+                                  global_batch=8))
+    opt = make_optimizer("adamw", total_steps=100)
+    step = jax.jit(build_train_step(cfg, None, opt))
+    state = init_train_state(cfg, init_params(cfg, jax.random.PRNGKey(0)), opt)
+    b = data.batch(0)
+    state, m = step(state, b)           # compile
+    t0 = time.perf_counter()
+    for i in range(5):
+        state, m = step(state, data.batch(i + 1))
+    jax.block_until_ready(m["loss"])
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    n = sum(l.size for l in jax.tree_util.tree_leaves(state["params"]))
+    tok = 8 * 128
+    emit("train_micro/step", us,
+         f"params={n/1e6:.1f}M;tok_per_s={tok/(us/1e6):.0f};loss={float(m['loss']):.3f}")
+
+
+BENCHES = {
+    "adjoint_table": bench_adjoint_table,
+    "lenet_equiv": bench_lenet_equiv,
+    "table1": bench_table1,
+    "halo_appendix_b": bench_halo_appendix_b,
+    "prim_micro": bench_prim_micro,
+    "layer_micro": bench_layer_micro,
+    "train_micro": bench_train_micro,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+    print(f"# {len(ROWS)} rows OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

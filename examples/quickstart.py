@@ -1,0 +1,75 @@
+"""Quickstart: the paper's primitives in 60 seconds.
+
+Builds a distributed 2-layer MLP from the paper's §4 affine algorithm on a
+2x4 mesh (8 host devices), verifies every operator with the paper's Eq. 13
+adjoint test, and takes a few gradient steps — distributed and sequential
+losses match to float tolerance.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+(sets XLA_FLAGS itself to get 8 host devices)
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import adjoint_test
+from repro.core import layers as L
+from repro.core import primitives as prim
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("fo", "fi"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    # --- 1. the paper's Eq. 13 adjoint test on the primitives -------------
+    print("== adjoint tests (paper Eq. 13) ==")
+    f = prim.smap(lambda x: prim.sum_reduce(x, "fi"), mesh, P(None, "fi"), P())
+    print(" sum_reduce     :", adjoint_test(f, jax.random.normal(k1, (4, 8))))
+    g = prim.smap(lambda x: prim.halo_exchange(x, "fi", 0, 1, 1),
+                  mesh, P("fi"), P("fi"))
+    print(" halo_exchange  :", adjoint_test(g, jax.random.normal(k2, (16,))))
+
+    # --- 2. a distributed MLP from the §4 affine algorithm ----------------
+    w1 = jax.random.normal(k1, (64, 32)) * 0.1   # P_fo x P_fi partitioned
+    b1 = jnp.zeros((64,))
+    w2 = jax.random.normal(k2, (10, 64)) * 0.1
+    b2 = jnp.zeros((10,))
+    x = jax.random.normal(k3, (16, 32))
+    y = jax.nn.one_hot(jax.random.randint(k4, (16,), 0, 10), 10)
+
+    def dist_loss(params):
+        (w1, b1, w2, b2) = params
+        h = jax.nn.relu(L.dist_affine(mesh, x, w1, b1, fo_axis="fo", fi_axis="fi"))
+        o = L.dist_affine(mesh, h, w2, b2, fo_axis="fo", fi_axis="fi")
+        return ((o - y) ** 2).mean()
+
+    def seq_loss(params):
+        (w1, b1, w2, b2) = params
+        h = jax.nn.relu(x @ w1.T + b1)
+        o = h @ w2.T + b2
+        return ((o - y) ** 2).mean()
+
+    params = (w1, b1, w2, b2)
+    print("\n== distributed vs sequential training (paper §5 methodology) ==")
+    for step in range(5):
+        ld, gd = jax.value_and_grad(dist_loss)(params)
+        ls, gs = jax.value_and_grad(seq_loss)(params)
+        assert abs(ld - ls) < 1e-4, (ld, ls)
+        params = jax.tree_util.tree_map(lambda p, g: p - 0.1 * g, params, gd)
+        print(f" step {step}: dist loss {ld:.6f}   seq loss {ls:.6f}   "
+              f"max grad delta {max(float(jnp.abs(a-b).max()) for a,b in zip(jax.tree_util.tree_leaves(gd), jax.tree_util.tree_leaves(gs))):.2e}")
+    print("\ndistributed == sequential ✓ (the paper's §5 result, in miniature)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Serve a small LM with batched requests: prefill + streaming decode.
+
+Demonstrates the serving engine over the unified model: batched prompt
+prefill writes the KV caches, then lockstep decode appends tokens for the
+whole batch.  Greedy decode on a model trained for a few steps on the
+modular-drift task recovers the drift pattern.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.optim import make_optimizer
+from repro.serve import ServeEngine
+from repro.train import build_train_step, init_train_state
+
+CFG = ModelConfig(
+    name="serve-demo", family="dense",
+    num_layers=4, d_model=256, num_heads=8, num_kv_heads=4, head_dim=32,
+    d_ff=512, vocab_size=512, mlp_type="swiglu", rope_theta=1e5,
+    dtype="float32", remat=False, attn_chunk=64,
+)
+
+
+def main():
+    cfg = CFG
+    # quick-train so generation is meaningful
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8, seed=5))
+    opt = make_optimizer("adamw", total_steps=150, base_lr=2e-3)
+    step = jax.jit(build_train_step(cfg, None, opt))
+    state = init_train_state(cfg, init_params(cfg, jax.random.PRNGKey(0)), opt)
+    for s in range(150):
+        state, m = step(state, data.batch(s))
+    print(f"trained 150 steps, final loss {float(m['loss']):.3f}")
+
+    # batched serving
+    engine = ServeEngine(cfg, state["params"], None, max_seq=96, batch_size=4)
+    prompt = data.batch(999)["tokens"][:4, :16]
+    out = engine.generate(prompt, steps=16, greedy=True)
+
+    drift = 1 + (5 % (cfg.vocab_size - 1))
+    expect = (prompt[:, -1:] + drift * (1 + np.arange(16))[None, :]) % cfg.vocab_size
+    acc = float((np.asarray(out) == np.asarray(expect)).mean())
+    print(f"batched generation: {out.shape[0]} streams x {out.shape[1]} tokens")
+    print("first stream :", np.asarray(out[0]))
+    print("expected     :", np.asarray(expect[0]))
+    print(f"pattern accuracy: {acc:.2%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Train a ~100M-parameter GLM-family LM for a few hundred steps on CPU.
+
+End-to-end driver over the real substrates: synthetic-but-learnable data
+pipeline (prefetching), AdamW + warmup-cosine, fault-tolerant loop with
+atomic checkpoints, auto-resume, straggler monitor.  Loss drops from ~6.2
+(ln 512 ~ random) toward ~0.1 as the model learns the modular-drift task.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import ModelConfig
+from repro.data import DataConfig, PrefetchIterator, SyntheticLM
+from repro.models import init_params
+from repro.optim import make_optimizer
+from repro.train import (LoopConfig, build_train_step, init_train_state,
+                         restart_on_failure)
+
+# ~100M params: a small GLM-like dense decoder
+CFG = ModelConfig(
+    name="glm-100m", family="dense",
+    num_layers=8, d_model=768, num_heads=12, num_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab_size=8192, mlp_type="swiglu", rope_theta=1e5,
+    dtype="float32", remat=False, attn_chunk=128,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = CFG
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    print(f"model: {n/1e6:.1f}M params")
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                                  global_batch=args.batch, seed=11))
+    opt = make_optimizer("adamw", total_steps=args.steps, base_lr=6e-4)
+    step = jax.jit(build_train_step(cfg, None, opt))
+
+    def make_state():
+        return init_train_state(cfg, init_params(cfg, jax.random.PRNGKey(0)), opt)
+
+    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=100, log_every=10)
+    state, hist = restart_on_failure(make_state, step,
+                                     lambda s: PrefetchIterator(data, s),
+                                     loop_cfg)
+    first = sum(h["loss"] for h in hist[:5]) / 5 if len(hist) >= 5 else None
+    last = sum(h["loss"] for h in hist[-5:]) / 5
+    print(f"\nloss: first5={first:.3f} -> last5={last:.3f} "
+          f"({len(hist)} steps, {sum(h['sec'] for h in hist):.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

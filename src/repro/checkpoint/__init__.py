@@ -1,0 +1,2 @@
+from . import ckpt  # noqa: F401
+from .ckpt import latest_step, restore, save, save_async, wait_pending  # noqa: F401

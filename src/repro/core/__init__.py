@@ -1,0 +1,19 @@
+"""Core of the reproduction: the paper's linear-algebraic model parallelism.
+
+- ``memory``      linear memory ops + adjoints            (paper §2, App. A)
+- ``partition``   balanced decomposition + halo geometry  (paper §3, App. B)
+- ``primitives``  parallel data movement + manual adjoints (paper §3)
+- ``adjoint``     the Eq. 13 coherence test harness
+- ``layers``      distributed affine/conv/pool/embedding   (paper §4)
+- ``overlap``     ring collective-matmul compute/comm overlap (beyond paper)
+"""
+
+from . import adjoint, layers, memory, overlap, partition, primitives  # noqa: F401
+
+from .adjoint import adjoint_test, inner, norm  # noqa: F401
+from .partition import (  # noqa: F401
+    TensorPartition,
+    balanced_split,
+    compute_halos,
+    conv_output_size,
+)

@@ -1,0 +1,96 @@
+"""Adjoint-test harness (paper §3 "Implementation", Eq. 13).
+
+Data-movement operators are linear, so F is its own Jacobian and correctness
+of a manually implemented adjoint F* can be established without numerical
+gradient checks:
+
+    |<Fx, y> - <x, F*y>|
+    --------------------------------------  <  eps
+    max(||Fx|| ||y||,  ||x|| ||F*y||)
+
+We obtain F* from JAX itself (``jax.vjp``), so the test verifies that the
+``custom_vjp`` rule we registered *is* the adjoint of the forward operator
+under the Euclidean inner product — i.e. that our hand-derived backward rule
+is coherent with the forward implementation.
+
+Works for pytree-valued operators: the inner product is the sum of the
+elementwise products over all leaves (the paper's inclusive memory model —
+a pytree is just a structured view of one memory space).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["inner", "norm", "adjoint_test", "AdjointReport"]
+
+
+def inner(a, b) -> jax.Array:
+    """Euclidean inner product over a pytree (paper Eq. 2)."""
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    total = jnp.zeros((), jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    for la, lb in zip(leaves_a, leaves_b):
+        total = total + jnp.sum(la.astype(total.dtype) * lb.astype(total.dtype))
+    return total
+
+
+def norm(a) -> jax.Array:
+    return jnp.sqrt(inner(a, a))
+
+
+class AdjointReport:
+    def __init__(self, name: str, rel_err: float, eps: float):
+        self.name = name
+        self.rel_err = float(rel_err)
+        self.eps = float(eps)
+        self.passed = self.rel_err < eps
+
+    def __repr__(self):
+        status = "PASS" if self.passed else "FAIL"
+        return f"AdjointReport({self.name}: rel_err={self.rel_err:.3e} < {self.eps:.1e} [{status}])"
+
+
+def adjoint_test(
+    f: Callable,
+    x,
+    y=None,
+    *,
+    key: jax.Array | None = None,
+    eps: float = 1e-4,
+    name: str = "op",
+) -> AdjointReport:
+    """Run the paper's Eq. 13 coherence test on linear operator ``f``.
+
+    Args:
+      f: a linear function of one pytree argument.
+      x: input pytree (values used directly; supply random values).
+      y: cotangent pytree matching f(x)'s structure.  If None, drawn from
+         ``key`` (required then).
+    """
+    fx, vjp_fn = jax.vjp(f, x)
+    if y is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        leaves, treedef = jax.tree_util.tree_flatten(fx)
+        keys = jax.random.split(key, len(leaves))
+        y = jax.tree_util.tree_unflatten(
+            treedef,
+            [
+                jax.random.normal(k, l.shape, dtype=jnp.float32).astype(l.dtype)
+                for k, l in zip(keys, leaves)
+            ],
+        )
+    (fstar_y,) = vjp_fn(y)
+
+    lhs = inner(fx, y)
+    rhs = inner(x, fstar_y)
+    denom = jnp.maximum(norm(fx) * norm(y), norm(x) * norm(fstar_y))
+    denom = jnp.maximum(denom, jnp.asarray(1e-30, denom.dtype))
+    rel_err = jnp.abs(lhs - rhs) / denom
+    return AdjointReport(name, np.asarray(jax.device_get(rel_err)), eps)

@@ -1,0 +1,282 @@
+"""Model-parallel layers composed from the paper's primitives (paper §4).
+
+Each layer follows the paper's algorithm verbatim, with the MPI partition
+replaced by named mesh axes (DESIGN.md §2):
+
+  affine  (dense):  x̂ = B x  ->  local GEMM  ->  y = R ŷ          (§4 Dense)
+  conv    (sparse): x = H x  ->  ŵ,x̂ = B w,x ->  local conv -> R   (§4 Sparse)
+  pool    (sparse): x = H x  ->  local pool                        (§4 Sparse)
+  embedding:        local masked lookup -> R (vocab-partitioned)
+
+The broadcasts are identities in SPMD (sources are replicated over the
+relevant axes) but carry the *adjoint* sum-reductions that make gradients of
+replicated tensors correct — the paper's central observation.  Point-wise
+layers need no intervention (§4: "embarrassingly parallel") and use native
+ops.
+
+Weight partitions follow the paper: affine weights live on a
+``P_fo x P_fi`` partition; the bias lives on one ``P_fo x 1`` subpartition
+("to avoid multiple counting of the bias") — realized in SPMD by applying
+the bias only where ``axis_index(fi) == 0``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import primitives as prim
+from .partition import compute_halos, max_halo_widths
+
+__all__ = [
+    "dist_affine",
+    "dist_affine_fn",
+    "dist_conv1d_causal",
+    "dist_conv_same",
+    "dist_pool",
+    "dist_embedding",
+]
+
+
+# ---------------------------------------------------------------------------
+# Dense layer (paper §4 "Dense layers"): y = W x + b on a P_fo x P_fi grid.
+# ---------------------------------------------------------------------------
+
+def dist_affine_fn(x, w, b, *, fo_axis: str, fi_axis: str | None):
+    """Body of the paper's Forward Affine Algorithm; call inside shard_map.
+
+    Shapes (local): x (..., n_fi_loc)  w (n_fo_loc, n_fi_loc)  b (n_fo_loc,).
+    x is replicated over ``fo_axis`` and sharded over ``fi_axis``; w is
+    sharded over both; the output is sharded over ``fo_axis`` and replicated
+    over ``fi_axis``.
+    """
+    # Step 2: x̂ <- B_{Px->Pw} x.  x arrives through a replicated in_spec over
+    # ``fo_axis``: the forward broadcast is the SPMD identity and shard_map's
+    # boundary transpose performs the paper's B* (sum-reduce over fo) on the
+    # cotangent — see primitives.broadcast usage contract.
+    x_hat = x
+    y_hat = jnp.einsum("...i,oi->...o", x_hat, w)
+    if b is not None:
+        if fi_axis is None:
+            y_hat = y_hat + b
+        else:
+            # Bias lives on the P_fo x 1 subpartition (fi index 0 only, paper
+            # §4): masking keeps the sum-reduce below from multi-counting it,
+            # and routes the bias cotangent only through the root subpartition.
+            on_root = (jax.lax.axis_index(fi_axis) == 0).astype(y_hat.dtype)
+            y_hat = y_hat + b * on_root
+    # Step 4: y <- R_{Pw->Py} ŷ : sum-reduce over the fi axis (psum forward,
+    # broadcast adjoint — the paper's R/R* pair).
+    if fi_axis is not None:
+        y_hat = prim.sum_reduce(y_hat, fi_axis)
+    return y_hat
+
+
+def dist_affine(mesh, x, w, b=None, *, fo_axis="model", fi_axis=None,
+                batch_axis=None):
+    """Distributed affine layer y = x W^T + b (paper §4 Dense).
+
+    Global shapes: x (..., n_fi), w (n_fo, n_fi), b (n_fo,).
+    Partition: w over (fo_axis, fi_axis); x over (batch_axis, fi_axis);
+    y over (batch_axis, fo_axis).
+    """
+    xdims = [None] * (x.ndim - 1)
+    if batch_axis is not None:
+        xdims[0] = batch_axis
+    in_specs = (
+        P(*xdims, fi_axis),
+        P(fo_axis, fi_axis),
+    )
+    args = (x, w)
+    if b is not None:
+        in_specs = in_specs + (P(fo_axis),)
+        args = args + (b,)
+    out_spec = P(*xdims, fo_axis)
+
+    def body(*a):
+        xx, ww = a[0], a[1]
+        bb = a[2] if len(a) > 2 else None
+        return dist_affine_fn(xx, ww, bb, fo_axis=fo_axis, fi_axis=fi_axis)
+
+    return prim.smap(body, mesh, in_specs, out_spec)(*args)
+
+
+# ---------------------------------------------------------------------------
+# Sparse layers (paper §4 "Sparse layers"): halo exchange + local kernel op.
+# ---------------------------------------------------------------------------
+
+def dist_conv1d_causal_fn(x, w, *, seq_axis: str, dim: int = 1):
+    """Causal depthwise conv1d under sequence sharding; call inside shard_map.
+
+    x local (batch, seq_loc, channels); w (k, channels).  The halo is the
+    paper's one-sided unbalanced case (App. B4): every worker needs a
+    (k-1)-wide LEFT halo; the first worker's missing halo is the causal zero
+    padding, which the zero-filled boundary margin provides for free.
+    """
+    k = w.shape[0]
+    if k > 1:
+        x = prim.halo_exchange(x, seq_axis, dim, k - 1, 0)
+    # local valid causal conv via sliding windows
+    out = jnp.zeros((x.shape[0], x.shape[dim] - (k - 1), x.shape[-1]), x.dtype)
+    for i in range(k):
+        sl = [slice(None)] * x.ndim
+        sl[dim] = slice(i, x.shape[dim] - (k - 1) + i)
+        out = out + x[tuple(sl)] * w[i]
+    return out
+
+
+def dist_conv1d_causal(mesh, x, w, *, seq_axis="model", batch_axis="data"):
+    """Depthwise causal conv1d with the sequence dim sharded over ``seq_axis``."""
+    return prim.smap(
+        partial(dist_conv1d_causal_fn, seq_axis=seq_axis),
+        mesh,
+        (P(batch_axis, seq_axis, None), P(None, None)),
+        P(batch_axis, seq_axis, None),
+    )(x, w)
+
+
+def dist_conv_same(mesh, x, w, b=None, *, spatial_axes: Sequence[str | None],
+                   batch_axis=None, co_axis=None, ci_axis=None):
+    """Distributed D-dim convolution, stride 1, 'same' zero padding
+    (paper §4 Forward Convolution Algorithm).
+
+    Global shapes: x (n_b, n_ci, m_0..m_{D-1}), w (n_co, n_ci, k_0..k_{D-1}),
+    b (n_co,).  ``spatial_axes[d]`` names the mesh axis sharding feature dim
+    d (None = not sharded).  Kernels must be odd-sized; the boundary
+    zero-margins from the halo exchange realize the global 'same' padding.
+    """
+    D = len(spatial_axes)
+    ks = w.shape[2:]
+    assert all(k % 2 == 1 for k in ks), "same-conv requires odd kernels"
+
+    x_spec = P(batch_axis, ci_axis, *spatial_axes)
+    w_spec = P(co_axis, ci_axis, *([None] * D))
+    y_spec = P(batch_axis, co_axis, *spatial_axes)
+    specs = [x_spec, w_spec]
+    args = [x, w]
+    if b is not None:
+        specs.append(P(co_axis))
+        args.append(b)
+
+    def body(*a):
+        xx, ww = a[0], a[1]
+        bb = a[2] if len(a) > 2 else None
+        # Step 2: halo exchange per sharded spatial dim (nested, Eq. 11).
+        pads = []
+        for d, ax in enumerate(spatial_axes):
+            h = (ks[d] - 1) // 2
+            if ax is not None and h > 0:
+                xx = prim.halo_exchange(xx, ax, 2 + d, h, h)
+                # boundary workers got zero margins == global 'same' padding
+                pads.append((0, 0))
+            else:
+                pads.append((h, h))  # unsharded dim: ordinary local padding
+        # Steps 3-5: broadcasts.  w arrives replicated over batch/spatial
+        # axes and x over co via the in_specs: forward broadcasts are SPMD
+        # identities, and shard_map's boundary transpose realizes the
+        # adjoint sum-reduces (paper Eq. 9) — see primitives.broadcast.
+        # Step 6: local conv (valid on halo-augmented tensor).
+        yy = jax.lax.conv_general_dilated(
+            xx, ww, window_strides=(1,) * D,
+            padding=pads,
+            dimension_numbers=jax.lax.conv_dimension_numbers(
+                xx.shape, ww.shape, ("NC" + "DHW"[-D:], "OI" + "DHW"[-D:],
+                                     "NC" + "DHW"[-D:])),
+        )
+        # Bias lives on one P_co x 1 subpartition (paper §4): apply it before
+        # the reduction, masked to the ci-root, so the sum counts it once.
+        if bb is not None:
+            if ci_axis is None:
+                yy = yy + bb.reshape((1, -1) + (1,) * D)
+            else:
+                on_root = (jax.lax.axis_index(ci_axis) == 0).astype(yy.dtype)
+                yy = yy + bb.reshape((1, -1) + (1,) * D) * on_root
+        # Step 7: y <- R over the ci axis.
+        if ci_axis is not None:
+            yy = prim.sum_reduce(yy, ci_axis)
+        return yy
+
+    return prim.smap(body, mesh, tuple(specs), y_spec)(*args)
+
+
+def dist_pool(mesh, x, *, k: int, stride: int, op: str = "max",
+              spatial_axes: Sequence[str | None], batch_axis=None,
+              channel_axis=None):
+    """Distributed pooling (paper §4 Forward Pooling Algorithm).
+
+    Supports the SPMD-uniform case: every sharded spatial extent divides
+    evenly and local extents are stride-aligned, so halos are empty (App. B4
+    workers 0/1) or uniform.  The general unbalanced geometry is computed by
+    ``partition.compute_halos`` and validated against App. B in tests.
+    """
+    D = len(spatial_axes)
+    x_spec = P(batch_axis, channel_axis, *spatial_axes)
+
+    def body(xx):
+        for d, ax in enumerate(spatial_axes):
+            if ax is None:
+                continue
+            n_loc = xx.shape[2 + d]
+            if n_loc % stride != 0:
+                raise ValueError("dist_pool requires stride-aligned local extents")
+            if k > stride:
+                xx = prim.halo_exchange(xx, ax, 2 + d, 0, k - stride)
+        if k == stride:
+            # non-overlapping pool via reshape-reduce: equivalent to
+            # reduce_window and (unlike reduce_window with a custom monoid)
+            # reverse-differentiable inside shard_map.
+            shape = list(xx.shape[:2])
+            for d in range(D):
+                shape += [xx.shape[2 + d] // k, k]
+            r = xx.reshape(shape)
+            axes = tuple(3 + 2 * d for d in range(D))
+            yy = r.max(axis=axes) if op == "max" else r.mean(axis=axes)
+            return yy
+        init = -jnp.inf if op == "max" else 0.0
+        red = jax.lax.max if op == "max" else jax.lax.add
+        window = (1, 1) + (k,) * D
+        strides = (1, 1) + (stride,) * D
+        yy = jax.lax.reduce_window(xx, jnp.asarray(init, xx.dtype), red,
+                                   window, strides, "VALID")
+        if op == "avg":
+            yy = yy / (k ** D)
+        return yy
+
+    return prim.smap(body, mesh, x_spec, x_spec)(x)
+
+
+# ---------------------------------------------------------------------------
+# Embedding: vocab-partitioned table; local masked lookup then sum-reduce
+# (each token's row lives on exactly one worker, so the sum is exact).
+# ---------------------------------------------------------------------------
+
+def dist_embedding_fn(ids, table, *, vocab_axis: str, vocab_global: int):
+    """Body for a vocab-sharded embedding lookup; call inside shard_map.
+
+    ids local (...,) int32; table local (vocab_loc, d).  Workers look up only
+    ids in their own vocab range and contribute zeros otherwise; the
+    sum-reduce over ``vocab_axis`` assembles the full embedding (paper's R).
+    """
+    vloc = table.shape[0]
+    idx = jax.lax.axis_index(vocab_axis)
+    lo = idx * vloc
+    local = ids - lo
+    in_range = (local >= 0) & (local < vloc)
+    local = jnp.clip(local, 0, vloc - 1)
+    emb = jnp.take(table, local, axis=0)
+    emb = jnp.where(in_range[..., None], emb, jnp.zeros((), emb.dtype))
+    return prim.sum_reduce(emb, vocab_axis)
+
+
+def dist_embedding(mesh, ids, table, *, vocab_axis="model", batch_axis="data"):
+    vocab_global = table.shape[0]
+    return prim.smap(
+        partial(dist_embedding_fn, vocab_axis=vocab_axis, vocab_global=vocab_global),
+        mesh,
+        (P(batch_axis), P(vocab_axis, None)),
+        P(batch_axis, None),
+    )(ids, table)

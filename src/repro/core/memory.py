@@ -1,0 +1,183 @@
+"""Linear-algebraic memory model (paper §2, Appendix A).
+
+Every primitive memory operation — allocation, clear, add, copy, move — is a
+linear operator on the space F^k of "a computer's memory".  Because they are
+linear, each operator is its own Jacobian, and the adjoint required for
+reverse-mode differentiation follows from the Euclidean inner product
+(paper Eq. 1-2) rather than from the AD tool.
+
+We register the *manually derived* adjoint of every operator with JAX via
+``jax.custom_vjp`` — exactly the paper's program: the AD tool composes our
+hand-built adjoints, it does not derive them.
+
+A "subset of memory" is modelled as a contiguous slice of the flattened
+tensor.  JAX is functional, so every op here is out-of-place at the XLA
+level; the paper's in-place/out-of-place distinction (C = S·K vs S·A)
+collapses semantically, as §2 predicts.  We keep both constructions for
+fidelity, and the adjoint tests in ``tests/test_adjoints.py`` exercise both.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "allocate",
+    "deallocate",
+    "clear",
+    "add",
+    "copy_inplace",
+    "copy_outofplace",
+    "move_inplace",
+    "move_outofplace",
+]
+
+
+# ---------------------------------------------------------------------------
+# Allocation  A_b : F^m -> F^n   (paper Eq. 3);  adjoint = deallocation (Eq. 4)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def allocate(x: jax.Array, n_new: int) -> jax.Array:
+    """A_b x = [x; 0_b] — bring ``n_new`` zero elements into scope."""
+    return jnp.concatenate([x, jnp.zeros((n_new,), x.dtype)])
+
+
+def _allocate_fwd(x, n_new):
+    return allocate(x, n_new), None
+
+
+def _allocate_bwd(n_new, _, y_bar):
+    # A* = [I_a  O_b]: drop the cotangent on the new subset (deallocation).
+    return (y_bar[: y_bar.shape[0] - n_new],)
+
+
+allocate.defvjp(_allocate_fwd, _allocate_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def deallocate(x: jax.Array, n_drop: int) -> jax.Array:
+    """D_b x = [x_a] — drop the trailing subset.  D* = A (allocation)."""
+    return x[: x.shape[0] - n_drop]
+
+
+def _deallocate_fwd(x, n_drop):
+    return deallocate(x, n_drop), None
+
+
+def _deallocate_bwd(n_drop, _, y_bar):
+    return (jnp.concatenate([y_bar, jnp.zeros((n_drop,), y_bar.dtype)]),)
+
+
+deallocate.defvjp(_deallocate_fwd, _deallocate_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Clear  K_b : F^m -> F^m   (paper Eq. 5) — self-adjoint
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def clear(x: jax.Array, lo: int, hi: int) -> jax.Array:
+    """K_b x: zero the subset x[lo:hi]."""
+    return x.at[lo:hi].set(0)
+
+
+def _clear_fwd(x, lo, hi):
+    return clear(x, lo, hi), None
+
+
+def _clear_bwd(lo, hi, _, y_bar):
+    # K* = K: the cleared subset receives no cotangent.
+    return (y_bar.at[lo:hi].set(0),)
+
+
+clear.defvjp(_clear_fwd, _clear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Add  S_{a->b} : F^m -> F^m   (paper Eq. 6);  adjoint S_{b->a} (Eq. 7)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def add(x: jax.Array, a: tuple[int, int], b: tuple[int, int]) -> jax.Array:
+    """S_{a->b} x: x_b += x_a (subsets given as index ranges)."""
+    return x.at[b[0] : b[1]].add(x[a[0] : a[1]])
+
+
+def _add_fwd(x, a, b):
+    return add(x, a, b), None
+
+
+def _add_bwd(a, b, _, y_bar):
+    # S*_{a->b} = S_{b->a}: the cotangent of the destination adds into the
+    # source's cotangent.
+    return (y_bar.at[a[0] : a[1]].add(y_bar[b[0] : b[1]]),)
+
+
+add.defvjp(_add_fwd, _add_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Copy (paper §2 table):   in-place  C_{a->b} = S_{a->b} K_b,  C* = K_b S_{b->a}
+#                          out-of-place C = S·A,               C* = D·S
+# Composed from the primitives above so the AD tool assembles the paper's
+# adjoint compositions automatically.
+# ---------------------------------------------------------------------------
+
+def copy_inplace(x: jax.Array, a: tuple[int, int], b: tuple[int, int]) -> jax.Array:
+    """C_{a->b} = S_{a->b} · K_b."""
+    return add(clear(x, b[0], b[1]), a, b)
+
+
+def copy_outofplace(x: jax.Array, a: tuple[int, int]) -> jax.Array:
+    """C_{a->b} = S_{a->b} · A_b  — appends a copy of x_a."""
+    n = a[1] - a[0]
+    m = x.shape[0]
+    return add(allocate(x, n), a, (m, m + n))
+
+
+# ---------------------------------------------------------------------------
+# Move (paper §2 table):   in-place  M = K_a S_{a->b} K_b,  M* = M_{b->a}
+#                          out-of-place M = D_a S_{a->b} A_b
+# ---------------------------------------------------------------------------
+
+def move_inplace(x: jax.Array, a: tuple[int, int], b: tuple[int, int]) -> jax.Array:
+    """M_{a->b} = K_a · S_{a->b} · K_b."""
+    return clear(add(clear(x, b[0], b[1]), a, b), a[0], a[1])
+
+
+def move_outofplace(x: jax.Array, a: tuple[int, int]) -> jax.Array:
+    """M = D_a · S_{a->b} · A_b: append a copy of x_a then drop x_a.
+
+    Only meaningful when a is the leading subset: the result is [x_rest; x_a]
+    re-ordered so the moved subset occupies fresh memory.  For the adjoint
+    test we use the leading-subset form.
+    """
+    n = a[1] - a[0]
+    m = x.shape[0]
+    y = add(allocate(x, n), a, (m, m + n))
+    # Deallocate the source subset: model as clear + slice-out via gather.
+    # For the linear-operator view a permutation suffices; we drop x_a.
+    idx = tuple(range(0, a[0])) + tuple(range(a[1], m + n))
+    return take_linear(y, idx)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def take_linear(x: jax.Array, idx: tuple[int, ...]) -> jax.Array:
+    """Gather rows by static index — a {0,1} selection matrix; adjoint is its
+    transpose (scatter-add)."""
+    return x[jnp.asarray(idx)]
+
+
+def _take_fwd(x, idx):
+    return take_linear(x, idx), x.shape[0]
+
+
+def _take_bwd(idx, m, y_bar):
+    return (jnp.zeros((m,), y_bar.dtype).at[jnp.asarray(idx)].add(y_bar),)
+
+
+take_linear.defvjp(_take_fwd, _take_bwd)

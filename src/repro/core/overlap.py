@@ -1,0 +1,83 @@
+"""Compute/communication overlap: ring collective-matmuls (beyond paper).
+
+The paper composes monolithic primitives (broadcast -> GEMM -> sum-reduce).
+On TPU, the collectives and the GEMM can be *interleaved*: decompose the
+all-gather (resp. reduce-scatter) into a ring of ``ppermute`` steps and issue
+a partial matmul per step, so the ICI transfer of chunk t+1 overlaps the MXU
+work on chunk t.  XLA's latency-hiding scheduler overlaps the independent
+ppermute/dot pairs in the unrolled loop.
+
+Both forms are linear in their inputs and are differentiated by composition:
+``ppermute`` transposes to the inverse permutation and the partial matmuls
+to their adjoint GEMMs, so the backward pass is automatically the matching
+ring collective — the paper's adjoint structure, schedule included.
+
+Call these inside shard_map bodies (manual axes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ring_allgather_matmul", "ring_matmul_reducescatter"]
+
+
+def _ring_perm(size: int) -> list[tuple[int, int]]:
+    return [(i, (i + 1) % size) for i in range(size)]
+
+
+def ring_allgather_matmul(x: jax.Array, w: jax.Array, axis_name) -> jax.Array:
+    """Compute ``all_gather(x, dim=-1) @ w`` as a ring, overlapping each
+    ppermute hop with a partial matmul.
+
+    Local shapes: x (..., f_loc) — the worker's feature shard; w
+    (f_tot, n_out_loc) — all rows, the worker's output-column shard.
+    Returns (..., n_out_loc), identical to the unfused gather-then-matmul.
+    """
+    size = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    f_loc = x.shape[-1]
+    assert w.shape[0] == f_loc * size, (w.shape, f_loc, size)
+
+    def w_block(i):
+        return jax.lax.dynamic_slice_in_dim(w, i * f_loc, f_loc, axis=0)
+
+    x_cur = x
+    acc = None
+    for t in range(size):
+        src = (idx - t) % size            # owner of the chunk we now hold
+        part = jnp.einsum("...f,fo->...o", x_cur, w_block(src))
+        acc = part if acc is None else acc + part
+        if t < size - 1:
+            x_cur = jax.lax.ppermute(x_cur, axis_name, _ring_perm(size))
+    return acc
+
+
+def ring_matmul_reducescatter(x: jax.Array, w: jax.Array, axis_name) -> jax.Array:
+    """Compute ``reduce_scatter(x @ w, dim=-1)`` as a ring, overlapping each
+    ppermute hop of the accumulator with the next partial matmul.
+
+    Local shapes: x (..., f_loc) — feature shard; w (f_loc, n_out_tot) —
+    the worker's row shard, all output columns.  Returns
+    (..., n_out_tot / size): worker j holds sum_i x_i @ w_i[:, block_j].
+    """
+    size = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    n_tot = w.shape[-1]
+    assert n_tot % size == 0
+    n_loc = n_tot // size
+
+    def w_block(i):
+        return jax.lax.dynamic_slice_in_dim(w, i * n_loc, n_loc, axis=-1)
+
+    acc = None
+    for t in range(size):
+        # Block added at step t travels (size-1-t) hops: lands on worker
+        # (idx + size-1-t) mod size, so contribute that worker's block now.
+        dest = (idx + size - 1 - t) % size
+        part = jnp.einsum("...f,fo->...o", x, w_block(dest))
+        acc = part if acc is None else acc + part
+        if t < size - 1:
+            acc = jax.lax.ppermute(acc, axis_name, _ring_perm(size))
+    return acc

@@ -1,0 +1,336 @@
+"""Parallel data-movement primitives with manually-derived adjoints (paper §3).
+
+Every operator here is *linear* in its data argument.  Following the paper,
+we do not let the AD tool derive the backward rule: each primitive registers
+its hand-derived adjoint through ``jax.custom_vjp``, and the AD tool merely
+composes them.  The derivations mirror the paper exactly:
+
+  broadcast   B : fwd identity-on-replicated (SPMD) / all-gather (partitioned)
+              B* = sum-reduce (Eq. 9) / reduce-scatter
+  sum-reduce  R = B*        R* = B            (paper §3)
+  all-reduce  A = B·R       A* = A            (self-adjoint)
+  all-to-all  T (block permutation)  T* = reverse all-to-all
+  send/recv   ppermute      adjoint = reverse ppermute
+  halo        H = K_T C_U C_E C_P K_S (Eq. 10)  H* adds into the bulk (Eq. 12)
+
+MPI -> TPU adaptation (DESIGN.md §2): a paper "partition" is a named mesh
+axis; primitives execute inside ``shard_map`` bodies.  Every primitive takes
+the ``axis_name`` of the mesh axis it moves data across.
+
+Correctness of every adjoint is established with the paper's Eq. 13 test
+(``repro.core.adjoint.adjoint_test``) in tests/test_adjoints.py, run on a
+multi-device mesh.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "smap",
+    "broadcast",
+    "sum_reduce",
+    "all_reduce",
+    "all_gather",
+    "reduce_scatter",
+    "all_to_all",
+    "send_recv",
+    "halo_exchange",
+    "halo_exchange_unbalanced",
+    "axis_size",
+]
+
+
+def smap(f, mesh, in_specs, out_specs):
+    """shard_map wrapper used throughout: vma checking is disabled because
+    our custom_vjp rules intentionally produce replication patterns the
+    checker cannot infer (the whole point of manual adjoints)."""
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=False)
+
+
+def axis_size(axis_name) -> int:
+    return jax.lax.axis_size(axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Broadcast / sum-reduce / all-reduce.  Paper Eq. 8-9 and §3.
+#
+# SPMD COTANGENT CONVENTION (measured on jax 0.8, check_vma=False; see
+# DESIGN.md §2): shard_map represents the cotangent of a *replicated* value
+# as per-device CONTRIBUTIONS whose sum over the axis is the true cotangent
+# (replicated out-boundaries divide by the axis size; ``lax.psum``
+# transposes to ``lax.psum``, i.e. "collect the contributions").
+#
+# Under this convention the paper's operators and adjoints become:
+#
+#   broadcast  B (replicated -> per-worker use):  fwd identity.
+#     Its adjoint — the paper's Eq. 9 sum-reduction — is realized by
+#     whichever psum *collects the per-device contributions downstream*:
+#     either shard_map's boundary transpose (replicated in_specs) or the
+#     transpose of the sum_reduce that produced the replicated value.  An
+#     extra psum here would double-count (verified empirically and by the
+#     Eq. 13 suite).
+#
+#   sum_reduce R (k partials -> replicated):      fwd psum.
+#     Manual adjoint: collect the contribution-form cotangent — a psum.
+#     This IS the paper's R*/B pair, with B* materialized where the
+#     convention stores the sum.
+#
+#   all_reduce A = B∘R: fwd psum; adjoint A* = R*∘B* = A — self-adjoint,
+#     exactly the paper's derivation.
+#
+# All three are validated against Eq. 13 as composites in tests/md.
+# ---------------------------------------------------------------------------
+
+def broadcast(x: jax.Array, axis_name) -> jax.Array:
+    """B_{a->{k}}: SPMD identity on a value replicated over ``axis_name``.
+
+    The adjoint sum-reduction (paper Eq. 9) is carried by the transpose of
+    the op that established the replication (see module comment)."""
+    del axis_name
+    return x
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def sum_reduce(x: jax.Array, axis_name) -> jax.Array:
+    """R_{{k}->a}: sums the k per-worker realizations; the result is
+    replicated over ``axis_name``.  The manual adjoint collects the
+    contribution-form cotangent (module comment)."""
+    return jax.lax.psum(x, axis_name)
+
+
+def _sum_reduce_fwd(x, axis_name):
+    return jax.lax.psum(x, axis_name), None
+
+
+def _sum_reduce_bwd(axis_name, _, g):
+    return (jax.lax.psum(g, axis_name),)
+
+
+sum_reduce.defvjp(_sum_reduce_fwd, _sum_reduce_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def all_reduce(x: jax.Array, axis_name) -> jax.Array:
+    """A = B·R, self-adjoint (paper §3): psum forward, psum backward."""
+    return jax.lax.psum(x, axis_name)
+
+
+def _all_reduce_fwd(x, axis_name):
+    return jax.lax.psum(x, axis_name), None
+
+
+def _all_reduce_bwd(axis_name, _, g):
+    # A* = R*·B* = B·R = A.
+    return (jax.lax.psum(g, axis_name),)
+
+
+all_reduce.defvjp(_all_reduce_fwd, _all_reduce_bwd)
+
+
+# ---------------------------------------------------------------------------
+# All-gather: the partitioned form of broadcast (each worker's subset is
+# copied to all workers).  Adjoint = the partitioned sum-reduce, i.e.
+# reduce-scatter.
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def all_gather(x: jax.Array, axis_name, dim: int) -> jax.Array:
+    """Partitioned broadcast along tensor dim ``dim``; adjoint=reduce-scatter."""
+    return jax.lax.all_gather(x, axis_name, axis=dim, tiled=True)
+
+
+def _all_gather_fwd(x, axis_name, dim):
+    return jax.lax.all_gather(x, axis_name, axis=dim, tiled=True), None
+
+
+def _all_gather_bwd(axis_name, dim, _, g):
+    return (jax.lax.psum_scatter(g, axis_name, scatter_dimension=dim, tiled=True),)
+
+
+all_gather.defvjp(_all_gather_fwd, _all_gather_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def reduce_scatter(x: jax.Array, axis_name, dim: int) -> jax.Array:
+    """Partitioned sum-reduce; adjoint = all-gather (partitioned broadcast)."""
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=dim, tiled=True)
+
+
+def _reduce_scatter_fwd(x, axis_name, dim):
+    return reduce_scatter(x, axis_name, dim), None
+
+
+def _reduce_scatter_bwd(axis_name, dim, _, g):
+    return (jax.lax.all_gather(g, axis_name, axis=dim, tiled=True),)
+
+
+reduce_scatter.defvjp(_reduce_scatter_fwd, _reduce_scatter_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Generalized all-to-all (paper §3): a block permutation matrix of
+# send-receives; the adjoint is the reverse block permutation.
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def all_to_all(x: jax.Array, axis_name, split_dim: int, concat_dim: int) -> jax.Array:
+    """Repartition: split local ``split_dim`` across workers, concatenate the
+    received blocks along ``concat_dim`` (the paper's tensor 'shuffle')."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=split_dim,
+                              concat_axis=concat_dim, tiled=True)
+
+
+def _all_to_all_fwd(x, axis_name, split_dim, concat_dim):
+    return all_to_all(x, axis_name, split_dim, concat_dim), None
+
+
+def _all_to_all_bwd(axis_name, split_dim, concat_dim, _, g):
+    # The adjoint of a (block) permutation is its inverse permutation.
+    return (jax.lax.all_to_all(g, axis_name, split_axis=concat_dim,
+                               concat_axis=split_dim, tiled=True),)
+
+
+all_to_all.defvjp(_all_to_all_fwd, _all_to_all_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Send/receive: a copy whose subsets live on different workers (paper §3).
+# Realized as a non-wrapping ring shift; the adjoint is the reverse shift
+# ("a receive-send pair ... the add operation may not be equivalent to
+# assignment").
+# ---------------------------------------------------------------------------
+
+def _shift_perm(size: int, offset: int) -> list[tuple[int, int]]:
+    return [(i, i + offset) for i in range(size) if 0 <= i + offset < size]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def send_recv(x: jax.Array, axis_name, offset: int) -> jax.Array:
+    """Copy each worker's realization to the worker ``offset`` positions away
+    (non-periodic); workers with no source receive zeros (fresh allocation,
+    paper §2)."""
+    size = jax.lax.axis_size(axis_name)
+    return jax.lax.ppermute(x, axis_name, _shift_perm(size, offset))
+
+
+def _send_recv_fwd(x, axis_name, offset):
+    return send_recv(x, axis_name, offset), None
+
+
+def _send_recv_bwd(axis_name, offset, _, g):
+    size = jax.lax.axis_size(axis_name)
+    return (jax.lax.ppermute(g, axis_name, _shift_perm(size, -offset)),)
+
+
+send_recv.defvjp(_send_recv_fwd, _send_recv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Halo exchange (paper Eq. 10-12, Appendix B).
+#
+# Uniform-width SPMD form: each worker owns a bulk of extent B along ``dim``
+# and receives a left margin (copy of its left neighbour's last ``left``
+# entries) and a right margin (right neighbour's first ``right`` entries).
+# Boundary margins are zero (the layer shim materializes global padding).
+#
+# The adjoint H* (Eq. 12) reverses every copy: margin cotangents travel back
+# to the neighbour that owns the data and *add into its bulk* — the paper's
+# key observation about adjoint halo exchanges in production adjoint codes.
+#
+# Unbalanced halos (App. B) are realized by masking the uniform buffers with
+# per-worker widths: masking is a diagonal (linear) operator, so composition
+# keeps the whole exchange adjoint-exact.
+# ---------------------------------------------------------------------------
+
+def _slice_dim(x, dim, lo, hi):
+    idx = [slice(None)] * x.ndim
+    idx[dim] = slice(lo, hi)
+    return x[tuple(idx)]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def halo_exchange(x: jax.Array, axis_name, dim: int, left: int, right: int) -> jax.Array:
+    """H: bulk-only local tensor -> [left margin | bulk | right margin]."""
+    size = jax.lax.axis_size(axis_name)
+    parts = []
+    if left > 0:
+        # left margin <- left neighbour's last `left` entries (copy to right).
+        lm = jax.lax.ppermute(_slice_dim(x, dim, x.shape[dim] - left, x.shape[dim]),
+                              axis_name, _shift_perm(size, +1))
+        parts.append(lm)
+    parts.append(x)
+    if right > 0:
+        # right margin <- right neighbour's first `right` entries.
+        rm = jax.lax.ppermute(_slice_dim(x, dim, 0, right),
+                              axis_name, _shift_perm(size, -1))
+        parts.append(rm)
+    return jnp.concatenate(parts, axis=dim) if len(parts) > 1 else x
+
+
+def _halo_fwd(x, axis_name, dim, left, right):
+    return halo_exchange(x, axis_name, dim, left, right), x.shape[dim]
+
+
+def _halo_bwd(axis_name, dim, left, right, bulk, g):
+    size = jax.lax.axis_size(axis_name)
+    x_bar = _slice_dim(g, dim, left, left + bulk)
+    if left > 0:
+        # Our left margin is a copy of the LEFT neighbour's trailing bulk:
+        # its cotangent returns there (send left) and ADDS into the bulk.
+        lm_bar = jax.lax.ppermute(_slice_dim(g, dim, 0, left),
+                                  axis_name, _shift_perm(size, -1))
+        idx = [slice(None)] * x_bar.ndim
+        idx[dim] = slice(bulk - left, bulk)
+        x_bar = x_bar.at[tuple(idx)].add(lm_bar)
+    if right > 0:
+        rm_bar = jax.lax.ppermute(_slice_dim(g, dim, left + bulk, left + bulk + right),
+                                  axis_name, _shift_perm(size, +1))
+        idx = [slice(None)] * x_bar.ndim
+        idx[dim] = slice(0, right)
+        x_bar = x_bar.at[tuple(idx)].add(rm_bar)
+    return (x_bar,)
+
+
+halo_exchange.defvjp(_halo_fwd, _halo_bwd)
+
+
+def halo_exchange_unbalanced(
+    x: jax.Array,
+    axis_name,
+    dim: int,
+    left_widths: Sequence[int],
+    right_widths: Sequence[int],
+) -> jax.Array:
+    """Generalized unbalanced halo exchange (paper App. B).
+
+    ``left_widths[i]`` / ``right_widths[i]`` give worker i's true halo
+    thicknesses (from ``partition.compute_halos``).  Buffers are uniform at
+    the max width; a per-worker diagonal mask zeroes the unused lanes, so
+    the composite remains a linear operator with an exact adjoint (the mask
+    composes with H through ordinary AD).
+
+    Returns the local tensor with max-width margins attached; entries beyond
+    a worker's true halo width are zero.
+    """
+    lmax = int(max(left_widths))
+    rmax = int(max(right_widths))
+    y = halo_exchange(x, axis_name, dim, lmax, rmax)
+    if lmax == 0 and rmax == 0:
+        return y
+    idx = jax.lax.axis_index(axis_name)
+    shape = [1] * y.ndim
+    shape[dim] = y.shape[dim]
+    pos = jax.lax.broadcasted_iota(jnp.int32, tuple(shape), dim)
+    lw = jnp.asarray(list(left_widths), jnp.int32)[idx]
+    rw = jnp.asarray(list(right_widths), jnp.int32)[idx]
+    bulk = x.shape[dim]
+    # keep positions [lmax - lw, lmax + bulk + rw)
+    mask = (pos >= lmax - lw) & (pos < lmax + bulk + rw)
+    return jnp.where(mask, y, jnp.zeros((), y.dtype))

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the compute hot spots (DESIGN.md §2 "Kernels"):
+flash_attention, ssd_scan (Mamba2 SSD chunk scan), rmsnorm.  Each has a
+pure-jnp oracle in ref.py and a jit'd dispatch wrapper in ops.py."""
+
+from . import ops, ref  # noqa: F401

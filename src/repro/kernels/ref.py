@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the adjoint-test discipline of
+the paper, applied to kernels: a slow, obviously-correct reference that the
+fast implementation must match on shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """Naive attention.  q: (B, Sq, H, hd); k/v: (B, Skv, KH, hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    group = H // KH
+    scale = 1.0 / np.sqrt(hd)
+    qf = q.astype(jnp.float32).reshape(B, Sq, KH, group, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a_neg, Bm, Cm, h0=None):
+    """Naive per-step SSD recurrence.
+
+    x: (B,S,H,P); dt: (B,S,H); a_neg: (H,); Bm/Cm: (B,S,N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = Bm.astype(jnp.float32)
+    cf = Cm.astype(jnp.float32)
+    h = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                      # (B,H,P), (B,H), (B,N)x2
+        decay = jnp.exp(dtt * a_neg[None, :])
+        h = h * decay[:, :, None, None] + jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h,
+                         (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+                          bf.swapaxes(0, 1), cf.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), h
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)

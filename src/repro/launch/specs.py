@@ -1,0 +1,52 @@
+"""ShapeDtypeStruct stand-ins for every model input and state pytree —
+weak-type-correct, shardable, no device allocation.  The dry-run lowers
+against these."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ModelConfig
+from repro.models import init_cache, init_params
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Model-input specs for one shape cell.
+
+    train:   {tokens|embeds, labels}
+    prefill: {tokens|embeds}
+    decode:  {tokens, cache_len} (+ cache specs via cache_specs()).
+    """
+    cell = SHAPES[shape_name]
+    B, S = cell.global_batch, cell.seq_len
+    stub = cfg.frontend != "none"
+    if cell.kind == "train":
+        batch = ({"embeds": sds((B, S, cfg.d_model), cfg.dtype)} if stub
+                 else {"tokens": sds((B, S), jnp.int32)})
+        batch["labels"] = sds((B, S), jnp.int32)
+        return batch
+    if cell.kind == "prefill":
+        return ({"embeds": sds((B, S, cfg.d_model), cfg.dtype)} if stub
+                else {"tokens": sds((B, S), jnp.int32)})
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sds((B, 1), jnp.int32),
+            "cache_len": sds((), jnp.int32)}
+
+
+def param_specs(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape over the real initializer
+    (no allocation)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def cache_specs(cfg: ModelConfig, shape_name: str):
+    cell = SHAPES[shape_name]
+    return jax.eval_shape(
+        lambda: init_cache(cfg, cell.global_batch, cell.seq_len,
+                           jnp.dtype(cfg.dtype)))

@@ -1,0 +1,2 @@
+from . import attention, blocks, common, model, moe, ssm  # noqa: F401
+from .model import forward, init_cache, init_params  # noqa: F401

@@ -1,0 +1,103 @@
+"""Decoder blocks: (attention | SSD mixer) + (dense MLP | MoE) sub-layers.
+
+A *superblock* is one period of the architecture's layer pattern (period 1
+for uniform stacks, 8 for Jamba's [7x mamba + 1x attn] interleave, 2 for
+alternating-MoE archs); model.py scans over stacked superblocks so compile
+time is O(period), not O(num_layers).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_block, attn_init
+from .common import mlp_apply, mlp_init, rmsnorm
+from .moe import moe_apply, moe_init
+from .ssm import ssm_block, ssm_init
+
+
+def layer_kinds(cfg, layer: int) -> tuple[str, str]:
+    return cfg.mixer_kind(layer), cfg.ffn_kind(layer)
+
+
+def sublayer_init(key, cfg, layer: int, dtype) -> dict:
+    mixer, ffn = layer_kinds(cfg, layer)
+    k1, k2 = jax.random.split(key)
+    p = {"norm_mixer": jnp.ones((cfg.d_model,), jnp.float32)}
+    if mixer == "attn":
+        p["attn"] = attn_init(k1, cfg, dtype)
+    else:
+        p["ssm"] = ssm_init(k1, cfg, dtype)
+    if ffn != "none":
+        p["norm_ffn"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if ffn == "mlp":
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    elif ffn == "moe":
+        p["moe"] = moe_init(k2, cfg, dtype)
+    return p
+
+
+def sublayer_apply(p, x, cfg, policy, layer: int, *, positions, mode,
+                   cache=None, cache_len=None, use_flash=False):
+    """One decoder layer: x + mixer(norm(x)); x + ffn(norm(x)).
+
+    Returns (x, new_cache, aux_loss)."""
+    mixer, ffn = layer_kinds(cfg, layer)
+    aux = jnp.zeros((), jnp.float32)
+
+    h = rmsnorm(x, p["norm_mixer"])
+    if mixer == "attn":
+        out, new_cache = attention_block(
+            p["attn"], h, cfg, policy, positions=positions, mode=mode,
+            cache=cache, cache_len=cache_len, use_flash=use_flash)
+    else:
+        out, new_cache = ssm_block(p["ssm"], h, cfg, policy, mode=mode,
+                                   cache=cache)
+    x = x + out
+    if policy is not None and mode != "decode":
+        x = policy.constrain(x, "batch", "seq", None)
+
+    if ffn != "none":
+        h = rmsnorm(x, p["norm_ffn"])
+        if ffn == "mlp":
+            out = mlp_apply(h, p["mlp"], cfg.mlp_type)
+            if policy is not None and mode != "decode":
+                out = policy.constrain(out, "batch", "seq", None)
+        else:
+            out, aux = moe_apply(h, p["moe"], cfg, policy)
+        x = x + out
+        if policy is not None and mode != "decode":
+            x = policy.constrain(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+def superblock_init(key, cfg, dtype) -> dict:
+    period = cfg.block_period
+    keys = jax.random.split(key, period)
+    return {f"pos{i}": sublayer_init(keys[i], cfg, i, dtype)
+            for i in range(period)}
+
+
+def superblock_apply(p, x, cfg, policy, *, positions, mode, cache=None,
+                     cache_len=None, use_flash=False):
+    """Apply one superblock (period consecutive layers).
+
+    cache: dict pos->layer cache (or None).  Returns (x, caches, aux_sum).
+
+    Layer-kind dispatch uses position within the superblock: the absolute
+    layer index is s*period + pos and every kind predicate in ModelConfig
+    has period dividing block_period, so kinds depend only on pos.
+    """
+    period = cfg.block_period
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for i in range(period):
+        sub_cache = cache.get(f"pos{i}") if cache is not None else None
+        x, c, aux = sublayer_apply(
+            p[f"pos{i}"], x, cfg, policy, i, positions=positions, mode=mode,
+            cache=sub_cache, cache_len=cache_len, use_flash=use_flash)
+        aux_total = aux_total + aux
+        if c is not None:
+            new_caches[f"pos{i}"] = c
+    return x, new_caches, aux_total

@@ -1,0 +1,138 @@
+"""Distributed LeNet-5 (paper §5, Appendix C).
+
+The paper's validation experiment: a LeNet-5 whose convolution/pooling
+stage is spatially partitioned (halo exchanges) and whose affine stage is
+partitioned over a P_fo x P_fi worker grid (broadcast -> local GEMM ->
+sum-reduce), with transpose layers as glue.  Over 50 MNIST trials the
+sequential and distributed networks matched (98.54% vs 98.55%).
+
+Here the same structure runs on a 2x2 mesh: the conv stage shards the image
+height over one axis (paper's halo exchange in dist_conv_same), the affine
+stage uses both axes as the paper's P_fo x P_fi = 2 x 2 partition (exactly
+Table 1's per-worker weight shapes), and the stage transition is the
+paper's transpose glue (an SPMD boundary re-specification).  The sequential
+reference uses identical math on one device; bench_lenet asserts the §5
+equivalence on a synthetic MNIST-like task.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import layers as L
+from repro.core import primitives as prim
+from repro.models.common import dense_init
+
+
+def lenet_init(key):
+    ks = jax.random.split(key, 8)
+    def conv_w(k, o, i, kh, kw):
+        return jax.random.normal(k, (o, i, kh, kw), jnp.float32) / np.sqrt(i * kh * kw)
+    return {
+        "conv1": {"w": conv_w(ks[0], 6, 1, 5, 5), "b": jnp.zeros((6,))},
+        "conv2": {"w": conv_w(ks[1], 16, 6, 5, 5), "b": jnp.zeros((16,))},
+        "fc1": {"w": dense_init(ks[2], 400, 120, jnp.float32).T, "b": jnp.zeros((120,))},
+        "fc2": {"w": dense_init(ks[3], 120, 84, jnp.float32).T, "b": jnp.zeros((84,))},
+        "fc3": {"w": dense_init(ks[4], 84, 10, jnp.float32).T, "b": jnp.zeros((10,))},
+    }
+
+
+def _crop_valid(x, dim, lo, hi):
+    idx = [slice(None)] * x.ndim
+    idx[dim] = slice(lo, hi)
+    return x[tuple(idx)]
+
+
+def lenet_apply_sequential(params, x):
+    """x: (B, 1, 28, 28) -> logits (B, 10).  Pure single-device reference."""
+    dn = lambda xs, ws: jax.lax.conv_dimension_numbers(
+        xs, ws, ("NCHW", "OIHW", "NCHW"))
+    h = jax.lax.conv_general_dilated(
+        x, params["conv1"]["w"], (1, 1), "SAME",
+        dimension_numbers=dn(x.shape, params["conv1"]["w"].shape))
+    h = jax.nn.relu(h + params["conv1"]["b"].reshape(1, -1, 1, 1))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 1, 2, 2),
+                              (1, 1, 2, 2), "VALID")            # 14x14
+    h2 = jax.lax.conv_general_dilated(
+        h, params["conv2"]["w"], (1, 1), "SAME",
+        dimension_numbers=dn(h.shape, params["conv2"]["w"].shape))
+    h2 = _crop_valid(_crop_valid(h2, 2, 2, 12), 3, 2, 12)       # VALID 10x10
+    h2 = jax.nn.relu(h2 + params["conv2"]["b"].reshape(1, -1, 1, 1))
+    h2 = jax.lax.reduce_window(h2, -jnp.inf, jax.lax.max, (1, 1, 2, 2),
+                               (1, 1, 2, 2), "VALID")           # 5x5
+    f = h2.reshape(h2.shape[0], -1)                             # (B, 400)
+    f = jax.nn.relu(f @ params["fc1"]["w"].T + params["fc1"]["b"])
+    f = jax.nn.relu(f @ params["fc2"]["w"].T + params["fc2"]["b"])
+    return f @ params["fc3"]["w"].T + params["fc3"]["b"]
+
+
+def lenet_apply_distributed(mesh, params, x, *, h_axis="fo", w_axis="fi"):
+    """Distributed forward on a 2x2 mesh (h_axis, w_axis).
+
+    Conv stage: image height sharded over ``h_axis`` -> dist_conv_same's
+    halo exchange (paper §4 sparse layers).  Affine stage: P_fo x P_fi =
+    (h_axis, w_axis) (paper §4 dense layers).  The flatten between them is
+    the paper's transpose glue.
+    """
+    # --- sparse stage: H sharded ---
+    h = L.dist_conv_same(mesh, x, params["conv1"]["w"], params["conv1"]["b"],
+                         spatial_axes=(h_axis, None))
+    h = jax.nn.relu(h)                                   # point-wise: native
+    h = L.dist_pool(mesh, h, k=2, stride=2, op="max",
+                    spatial_axes=(h_axis, None))         # 14x14, 7 local
+    h2 = L.dist_conv_same(mesh, h, params["conv2"]["w"], params["conv2"]["b"],
+                          spatial_axes=(h_axis, None))
+
+    # crop SAME->VALID: per-worker offsets (2,0) on the sharded H dim — the
+    # unbalanced-trim case of App. B (left_unused=2 on worker 0 only).
+    def crop_body(t):
+        idx = jax.lax.axis_index(h_axis)
+        start = jnp.where(idx == 0, 2, 0)
+        t = jax.lax.dynamic_slice_in_dim(t, start, 5, axis=2)
+        return t[:, :, :, 2:12]
+    h2 = prim.smap(crop_body, mesh, P(None, None, h_axis, None),
+                   P(None, None, h_axis, None))(h2)
+    h2 = jax.nn.relu(h2)
+
+    # --- transpose glue (paper Fig. C10): gather spatial, go feature-parallel
+    h2 = prim.smap(lambda t: prim.all_gather(t, h_axis, 2), mesh,
+                   P(None, None, h_axis, None), P(None, None, None, None))(h2)
+    h2 = jax.lax.reduce_window(h2, -jnp.inf, jax.lax.max, (1, 1, 2, 2),
+                               (1, 1, 2, 2), "VALID")    # 5x5
+    f = h2.reshape(h2.shape[0], -1)                      # (B, 400)
+
+    # --- dense stage: P_fo x P_fi = 2x2, Table 1 local shapes ---
+    f = jax.nn.relu(L.dist_affine(mesh, f, params["fc1"]["w"],
+                                  params["fc1"]["b"], fo_axis=h_axis,
+                                  fi_axis=w_axis))       # local w: (60, 200)
+    f = jax.nn.relu(L.dist_affine(mesh, f, params["fc2"]["w"],
+                                  params["fc2"]["b"], fo_axis=h_axis,
+                                  fi_axis=w_axis))       # local w: (42, 60)
+    return L.dist_affine(mesh, f, params["fc3"]["w"], params["fc3"]["b"],
+                         fo_axis=h_axis, fi_axis=w_axis)  # local w: (5, 42)
+
+
+def table1_local_shapes(mesh_shape=(2, 2)):
+    """Paper Table 1: per-worker learnable parameter shapes."""
+    pfo, pfi = mesh_shape
+    return {
+        "C5": (120 // pfo, 400 // pfi),   # (60, 200)
+        "F6": (84 // pfo, 120 // pfi),    # (42, 60)
+        "Output": (10 // pfo, 84 // pfi),  # (5, 42)
+    }
+
+
+def synthetic_mnist(key, n: int, noise: float = 0.35):
+    """MNIST-shaped synthetic classification task: 10 fixed prototype
+    'digits' (shared across all splits) + Gaussian noise.  Learnable to
+    ~99% by LeNet quickly."""
+    kx, kn = jax.random.split(key, 2)
+    protos = jax.random.normal(jax.random.PRNGKey(314159), (10, 1, 28, 28))
+    labels = jax.random.randint(kx, (n,), 0, 10)
+    imgs = protos[labels] + noise * jax.random.normal(kn, (n, 1, 28, 28))
+    return imgs, labels

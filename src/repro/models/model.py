@@ -1,0 +1,119 @@
+"""DecoderLM: the unified decoder-only model over all assigned architectures.
+
+One implementation covers dense (glm4/phi/mistral), MoE (kimi/llama4),
+hybrid (jamba), SSM (mamba2), and stub-frontend (musicgen/pixtral) archs,
+selected entirely by ModelConfig.  Parameters are stacked per superblock and
+scanned (compile time O(block period)); the scan body is rematerialized
+(``cfg.remat``) so only the sequence-sharded residual is saved per layer.
+
+Modes:
+  train   — full sequence, returns logits (for the loss in train/step.py)
+  prefill — full sequence, also returns the KV/SSM caches
+  decode  — single token against the caches (serve_step)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import superblock_apply, superblock_init
+from .common import dense_init, rmsnorm
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_super = cfg.num_layers // cfg.block_period
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": dense_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "norm_final": jnp.ones((cfg.d_model,), jnp.float32),
+        "blocks": jax.vmap(lambda k: superblock_init(k, cfg, dtype))(
+            jax.random.split(k_blocks, n_super)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    """Decode caches for every layer, stacked per superblock (scan layout)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_super = cfg.num_layers // cfg.block_period
+    hd = cfg.resolved_head_dim
+
+    def one(pos):
+        kind = cfg.mixer_kind(pos)
+        if kind == "attn":
+            shape = (n_super, batch, max_seq, cfg.num_kv_heads, hd)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        din = cfg.d_inner
+        return {
+            "conv": jnp.zeros((n_super, batch, cfg.conv_kernel - 1, din), dtype),
+            "ssm": jnp.zeros((n_super, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+        }
+
+    return {f"pos{i}": one(i) for i in range(cfg.block_period)}
+
+
+def forward(params, batch, cfg, policy=None, *, mode="train", cache=None,
+            use_flash=False):
+    """Returns (logits, new_cache, aux_loss).
+
+    batch: {"tokens": (B,S) int32} or {"embeds": (B,S,d)} for stub
+    frontends; decode additionally takes {"cache_len": ()} and S == 1.
+    """
+    if "embeds" in batch:
+        x = batch["embeds"]
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+    dtype = jnp.dtype(cfg.dtype)
+    x = x.astype(dtype)
+
+    cache_len = batch.get("cache_len", jnp.zeros((), jnp.int32))
+    if mode == "decode":
+        positions = jnp.broadcast_to(jnp.reshape(cache_len, (1, 1)), (B, 1))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    if policy is not None and mode != "decode":
+        x = policy.constrain(x, "batch", "seq", None)
+
+    def sb(carry, inp):
+        x, aux = carry
+        p_blk, cache_blk = inp
+        x, new_cache, aux_i = superblock_apply(
+            p_blk, x, cfg, policy, positions=positions, mode=mode,
+            cache=cache_blk, cache_len=cache_len, use_flash=use_flash)
+        return (x, aux + aux_i), new_cache
+
+    body = sb
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(sb, prevent_cse=False)
+
+    # None-valued cache dict contributes no scan leaves (train/prefill build
+    # caches from scratch); a real cache is stacked (n_super, ...) per pos.
+    cache_xs = cache if cache is not None else {
+        f"pos{i}": None for i in range(cfg.block_period)}
+
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], cache_xs),
+        unroll=cfg.unroll_scans)
+
+    x = rmsnorm(x, params["norm_final"])
+    head = params.get("lm_head")
+    if head is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if policy is not None:
+        # vocab owns the model axis here (seq stays unsharded: 'seq' and
+        # 'vocab' map to the same physical axis).
+        logits = policy.constrain(logits, "batch", None, "vocab")
+    return logits, new_cache, aux

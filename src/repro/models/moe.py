@@ -1,0 +1,179 @@
+"""Mixture-of-Experts with expert parallelism via the paper's primitives.
+
+The token dispatch/combine is the paper's *generalized all-to-all* (§3): a
+block permutation of send-receives repartitioning the dispatch buffer from
+token-major to expert-major layout; its adjoint is the reverse all-to-all.
+Expert weights are stored ZeRO-3-sharded over the data axis and gathered on
+use — the gather is the paper's broadcast B, its gradient reduce-scatter the
+adjoint R (Eq. 9).
+
+Dispatch is sort-based with a static per-device capacity (tokens routed
+beyond capacity are dropped, standard GShard semantics); every index op is
+a linear gather/scatter, so JAX composes exact adjoints around our
+custom-vjp collectives.
+
+Runs inside shard_map over (data, model): tokens arrive sharded over both
+(batch x sequence), experts are sharded over model (EP).  On a 1-device
+mesh every collective degenerates to the identity, so the same code path
+serves the CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import primitives as prim
+from .common import dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.num_experts
+    keys = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(h)
+    p = {
+        "router": dense_init(keys[0], d, E, jnp.float32),
+        "we_up": (jax.random.normal(keys[1], (E, d, h), jnp.float32) * s_in).astype(dtype),
+        "we_gate": (jax.random.normal(keys[2], (E, d, h), jnp.float32) * s_in).astype(dtype),
+        "we_down": (jax.random.normal(keys[3], (E, h, d), jnp.float32) * s_out).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(keys[4], d, h * cfg.num_shared_experts, "swiglu", dtype)
+    return p
+
+
+def _dispatch_combine_local(x, router_w, cfg, expert_fn):
+    """Per-device routing: top-k -> sort -> capacity buffer -> expert_fn ->
+    combine.  x: (T, d) local tokens.  expert_fn: (E, C, d) -> (E, C, d)
+    (may internally repartition E over the EP axis)."""
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+
+    logits = x.astype(jnp.float32) @ router_w          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, gate_idx = jax.lax.top_k(probs, k)           # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    counts = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0)
+    aux = E * jnp.sum((counts / (T * k)) * probs.mean(axis=0))
+
+    cap = int(math.ceil(T * k / E * cfg.capacity_factor))
+    flat_e = gate_idx.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[sorted_e].astype(jnp.int32)
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e * cap + pos, E * cap)  # drop slot = E*cap
+    tok = order // k
+
+    buf = jnp.zeros((E * cap + 1, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], x[tok], 0))
+    out = expert_fn(buf[: E * cap].reshape(E, cap, d))     # (E, cap, d)
+
+    out_pad = jnp.concatenate([out.reshape(E * cap, d),
+                               jnp.zeros((1, d), out.dtype)])
+    contrib = out_pad[slot] * (gate.reshape(-1)[order])[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[tok].add(
+        jnp.where(keep[:, None], contrib, 0).astype(x.dtype))
+    return y, aux
+
+
+def moe_block_fn(x, p, cfg, *, ep_axis, fsdp_axes, fsdp: bool, all_axes):
+    """shard_map body.  x: (B_loc, S_loc, d)."""
+    Bl, Sl, d = x.shape
+    xt = x.reshape(Bl * Sl, d)
+    ep = jax.lax.axis_size(ep_axis)
+    assert cfg.num_experts % ep == 0, (cfg.num_experts, ep)
+
+    def expert_fn(disp):  # (E, C, d) local slots for ALL experts
+        # Paper's generalized all-to-all: repartition token-slot-major ->
+        # expert-major.  (E, C, d) -> (E/ep, C*ep, d).
+        if ep > 1:
+            disp = prim.all_to_all(disp, ep_axis, 0, 1)
+        wu, wg, wd = p["we_up"], p["we_gate"], p["we_down"]
+        if fsdp:
+            # ZeRO-3 gather = paper's broadcast B; grads reduce-scatter = R.
+            # multipod shards params over (pod, data): gather each axis.
+            for ax in fsdp_axes:
+                wu = prim.all_gather(wu, ax, 1)
+                wg = prim.all_gather(wg, ax, 1)
+                wd = prim.all_gather(wd, ax, 2)
+        h = jnp.einsum("ecd,edh->ech", disp, wu)
+        g = jnp.einsum("ecd,edh->ech", disp, wg)
+        a = jax.nn.silu(g) * h
+        out = jnp.einsum("ech,ehd->ecd", a, wd)
+        if ep > 1:
+            out = prim.all_to_all(out, ep_axis, 1, 0)   # adjoint-direction
+        return out
+
+    y, aux = _dispatch_combine_local(xt, p["router"], cfg, expert_fn)
+    # average the aux loss over every mesh axis (tokens differ per device)
+    for ax in all_axes:
+        aux = jax.lax.pmean(aux, ax)
+    return y.reshape(Bl, Sl, d), aux
+
+
+def moe_apply(x, p, cfg, policy):
+    """MoE FFN sub-layer.  x: (B, S, d) global.  Returns (y, aux_loss)."""
+    if policy is None or not policy.explicit_moe:
+        # reference path: vmap experts densely (smoke tests / tiny configs)
+        def expert_fn(disp):
+            h = jnp.einsum("ecd,edh->ech", disp, p["we_up"])
+            g = jnp.einsum("ecd,edh->ech", disp, p["we_gate"])
+            out = jnp.einsum("ech,ehd->ecd", jax.nn.silu(g) * h, p["we_down"])
+            return out
+        B, S, d = x.shape
+        y, aux = _dispatch_combine_local(x.reshape(B * S, d), p["router"],
+                                         cfg, expert_fn)
+        y = y.reshape(B, S, d)
+        if cfg.num_shared_experts:
+            y = y + mlp_apply(x, p["shared"], "swiglu")
+        return y, aux
+
+    mesh = policy.mesh
+    B, S, d = x.shape
+
+    def _fits(phys, dim):
+        if phys is None:
+            return None
+        sizes = ([policy.axis_size(a) for a in phys]
+                 if isinstance(phys, tuple) else [policy.axis_size(phys)])
+        import numpy as _np
+        return phys if dim % int(_np.prod(sizes)) == 0 else None
+
+    dp = _fits(policy.phys("batch"), B)
+    sp = _fits(policy.phys("seq"), S)
+    ep_axis = policy.model_axis
+    x_spec = P(dp, sp, None)
+    w_specs = {
+        "router": P(None, None),
+        "we_up": policy.param_spec("we_up", p["we_up"].shape),
+        "we_gate": policy.param_spec("we_gate", p["we_gate"].shape),
+        "we_down": policy.param_spec("we_down", p["we_down"].shape),
+    }
+    p_in = {k: p[k] for k in w_specs}
+    fsdp_phys = policy.phys("fsdp")
+    fsdp_axes = (fsdp_phys if isinstance(fsdp_phys, tuple)
+                 else (fsdp_phys,)) if fsdp_phys else ()
+    denom = 1
+    for ax in fsdp_axes:
+        denom *= policy.axis_size(ax)
+    fsdp = policy.fsdp and denom > 0 and p["we_up"].shape[1] % denom == 0
+
+    body = partial(moe_block_fn, cfg=cfg, ep_axis=ep_axis,
+                   fsdp_axes=fsdp_axes, fsdp=fsdp,
+                   all_axes=tuple(mesh.axis_names))
+    y, aux = prim.smap(body, mesh, (x_spec, w_specs), (x_spec, P()))(x, p_in)
+    if cfg.num_shared_experts:
+        # shared expert: plain dense FFN under GSPMD (TP over ff).
+        y = y + mlp_apply(x, p["shared"], "swiglu")
+    return y, aux

@@ -1,0 +1,186 @@
+"""Mamba2 (SSD — state-space duality) sequence mixer.
+
+Chunked SSD algorithm (Dao & Gu 2024): within a chunk the quadratic
+"attention-like" form, across chunks a linear state recurrence — computed as
+one lax.scan whose carry is the SSM state, so both training (differentiable)
+and the O(1)-state decode step share the math.  The Pallas kernel
+(kernels/ssd_scan.py) is the TPU-target version of the same chunk step;
+this module is its jnp oracle and the CPU dry-run path.
+
+Under sequence parallelism the depthwise causal conv1d needs a (k-1)-wide
+left halo — the paper's one-sided unbalanced halo exchange (App. B4),
+provided by core.layers.dist_conv1d_causal on the explicit path.
+
+TP: heads (d_inner) sharded over the model axis; the B/C projections are
+per-group (g=1) and replicated.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rmsnorm
+
+
+def ssm_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    din = cfg.d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_heads
+    k = cfg.conv_kernel
+    keys = jax.random.split(key, 8)
+    # A in [1, 16) as in mamba2 reference init
+    a = jnp.exp(jax.random.uniform(keys[0], (nh,), jnp.float32,
+                                   math.log(1.0), math.log(16.0)))
+    return {
+        "in_z": dense_init(keys[1], d, din, dtype),
+        "in_x": dense_init(keys[2], d, din, dtype),
+        "in_B": dense_init(keys[3], d, ds, dtype),
+        "in_C": dense_init(keys[4], d, ds, dtype),
+        "in_dt": dense_init(keys[5], d, nh, dtype),
+        "conv_w": (jax.random.normal(keys[6], (k, din), jnp.float32)
+                   / math.sqrt(k)).astype(dtype),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "ssm_norm": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(keys[7], din, d, dtype),
+    }
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, C); w: (k, C).
+    state: (B, k-1, C) carry-in for decode; returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S, :] * w[i] for i in range(k))
+    new_state = xp[:, xp.shape[1] - (k - 1):, :] if k > 1 else None
+    return y, new_state
+
+
+def ssd_chunked(x, dt, a_neg, Bm, Cm, *, chunk: int, h0=None,
+                unroll: bool = False):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      positive step sizes
+    a_neg: (H,)        A = -exp(a_log)  (negative)
+    Bm, Cm: (B, S, N)  input/output projections (single group)
+    h0: optional (B, H, P, N) initial state.
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).  fp32 internals.
+    """
+    Bb, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    if S % L:
+        # ragged tail: pad with dt=0 steps — decay exp(0)=1 and zero input
+        # contribution make padding exact, not approximate.
+        pad = L - S % L
+        pw = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        y, hT = ssd_chunked(pw(x), pw(dt), a_neg, pw(Bm), pw(Cm),
+                            chunk=chunk, h0=h0, unroll=unroll)
+        return y[:, :S], hT
+    nc = S // L
+
+    xf = x.astype(jnp.float32).reshape(Bb, nc, L, H, Pd)
+    dtf = dt.astype(jnp.float32).reshape(Bb, nc, L, H)
+    Bf = Bm.astype(jnp.float32).reshape(Bb, nc, L, N)
+    Cf = Cm.astype(jnp.float32).reshape(Bb, nc, L, N)
+    a = dtf * a_neg[None, None, None, :]                 # (B, nc, L, H) <= 0
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc, ac = inp                        # (B,L,...)
+        acum = jnp.cumsum(ac, axis=1)                    # (B,L,H) inclusive
+        # ---- intra-chunk (the "duality" quadratic form) ----
+        seg = acum[:, :, None, :] - acum[:, None, :, :]  # (B,L,L,H): l,m
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        # mask BEFORE exp: the anti-causal lanes have seg >> 0 and exp(seg)
+        # overflows to inf, which the where() backward turns into 0*inf=NaN.
+        seg = jnp.where(causal[None, :, :, None], seg, -jnp.inf)
+        w = jnp.exp(seg)
+        cb = jnp.einsum("bln,bmn->blm", cc, bc)          # (B,L,L)
+        wmat = cb[..., None] * w * dtc[:, None, :, :]    # (B,L,L,H)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", wmat, xc)
+        # ---- inter-chunk: contribution of the carried state ----
+        y_inter = jnp.einsum("bln,bhpn->blhp", cc, h) * jnp.exp(acum)[..., None]
+        # ---- state update ----
+        decay_to_end = jnp.exp(acum[:, -1:, :] - acum)   # (B,L,H)
+        s_c = jnp.einsum("bln,blh,blhp->bhpn", bc, dtc * decay_to_end, xc)
+        h_new = h * jnp.exp(acum[:, -1, :])[:, :, None, None] + s_c
+        return h_new, y_intra + y_inter
+
+    hT, ys = jax.lax.scan(
+        chunk_step, h0,
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1), Bf.swapaxes(0, 1),
+         Cf.swapaxes(0, 1), a.swapaxes(0, 1)), unroll=unroll)
+    y = ys.swapaxes(0, 1).reshape(Bb, S, H, Pd)
+    return y.astype(x.dtype), hT
+
+
+def ssd_decode_step(x, dt, a_neg, Bm, Cm, h):
+    """Single-token recurrence: h' = exp(dt*A) h + dt * B x ;  y = C . h'.
+
+    x: (B, 1, H, P); dt: (B, 1, H); Bm/Cm: (B, 1, N); h: (B, H, P, N)."""
+    xf = x.astype(jnp.float32)[:, 0]                     # (B,H,P)
+    dtf = dt.astype(jnp.float32)[:, 0]                   # (B,H)
+    bf = Bm.astype(jnp.float32)[:, 0]                    # (B,N)
+    cf = Cm.astype(jnp.float32)[:, 0]
+    decay = jnp.exp(dtf * a_neg[None, :])                # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dtf, xf, bf)
+    h_new = h * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cf, h_new)
+    return y[:, None].astype(x.dtype), h_new
+
+
+def ssm_block(p, x, cfg, policy, *, mode, cache=None):
+    """Full Mamba2 sub-layer.  x: (B, S, d).  Returns (out, new_cache)."""
+    nh, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    z = jnp.einsum("bsd,di->bsi", x, p["in_z"])
+    xs = jnp.einsum("bsd,di->bsi", x, p["in_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["in_dt"])
+
+    conv_state = cache["conv"] if cache is not None and mode == "decode" else None
+    xs, new_conv = causal_conv1d(xs, p["conv_w"], conv_state)
+    xs = jax.nn.silu(xs)
+    if policy is not None and mode != "decode":
+        xs = policy.constrain(xs, "batch", None, "heads")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["a_log"])
+    xh = xs.reshape(xs.shape[0], xs.shape[1], nh, pd)
+
+    if mode == "decode":
+        y, h_new = ssd_decode_step(xh, dt, a_neg, Bm, Cm, cache["ssm"])
+    else:
+        h0 = None
+        L = min(64, xs.shape[1])
+        # The SSD chunk scan stays rolled even in dry-run flops-accounting
+        # lowers (unrolling 64+ chunk bodies explodes compile time); the
+        # roofline analysis adds the analytic SSD flops instead
+        # (roofline.analysis.ssd_flops_fwd).
+        y, h_new = ssd_chunked(xh, dt, a_neg, Bm, Cm, chunk=L, unroll=False)
+    y = y + (p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(xs.shape)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"])
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"conv": (new_conv if new_conv is not None
+                              else jnp.zeros((x.shape[0], 0, xs.shape[-1]), x.dtype)),
+                     "ssm": h_new}
+    return out, new_cache

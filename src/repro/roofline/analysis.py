@@ -1,0 +1,169 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs            / peak_FLOPs        (per chip)
+    memory     = HLO_bytes_accessed   / HBM_bandwidth     (per chip)
+    collective = collective_bytes     / ICI_link_bandwidth (per chip)
+
+``compiled.cost_analysis()`` reports the per-device partitioned module, so
+the formulas above equal the assignment's global forms (global = per-chip x
+chips; both numerator and denominator scale by chips).
+
+collective_bytes is not in cost_analysis: we parse the partitioned HLO and
+sum the *output* bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (per-device bytes moved on the wire, the
+standard lower-bound model).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\]))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind output bytes (per device) from partitioned HLO."""
+    out: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    model_flops: float
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per chip): remat / causal-masking /
+        dispatch waste shows up here."""
+        per_chip_model = self.model_flops / self.chips
+        return per_chip_model / self.flops if self.flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on model-flops utilization implied by the dominant
+        term: (model flops per chip / peak) / t_bound."""
+        per_chip_model = self.model_flops / self.chips
+        return (per_chip_model / PEAK_FLOPS) / self.t_bound if self.t_bound else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "model_flops_global": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS per step: 6·N_active·tokens for training
+    (2·N_a·tokens forward-only) + exact attention terms."""
+    from repro.configs import SHAPES
+    cell = SHAPES[shape_name]
+    B, S = cell.global_batch, cell.seq_len
+    n_active = cfg.active_param_count()
+    hd = cfg.resolved_head_dim
+    n_attn = sum(1 for i in range(cfg.num_layers) if cfg.mixer_kind(i) == "attn")
+
+    if cell.kind == "train":
+        tokens = B * S
+        matmul = 6 * n_active * tokens
+        attn = 3 * 2 * B * cfg.num_heads * S * S * hd * n_attn / 2  # causal half
+        return matmul + attn
+    if cell.kind == "prefill":
+        tokens = B * S
+        return 2 * n_active * tokens + 2 * B * cfg.num_heads * S * S * hd * n_attn / 2
+    # decode: one token per sequence; attention reads the whole cache
+    return 2 * n_active * B + 4 * B * cfg.num_heads * S * hd * n_attn
+
+
+def ssd_flops_fwd(cfg, B: int, S: int, L: int = 64) -> float:
+    """Analytic forward flops of the chunked SSD scan (dominant matmul
+    terms), for cells where the chunk scan stays rolled (nc > 256)."""
+    if not cfg.ssm_state:
+        return 0.0
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    n_ssm = sum(1 for i in range(cfg.num_layers) if cfg.mixer_kind(i) == "ssm")
+    per_tok = 2 * H * P * (L + 2 * N) + 2 * L * N
+    return float(B) * S * per_tok * n_ssm
+
+
+def analyze(compiled, cfg, shape_name: str, chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(flops=flops, bytes_accessed=byts,
+                    coll_bytes=float(coll["total_bytes"]),
+                    model_flops=model_flops(cfg, shape_name), chips=chips)

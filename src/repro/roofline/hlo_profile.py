@@ -1,0 +1,103 @@
+"""Dry-run 'profiler': structural analysis of the partitioned HLO.
+
+No wall-clock exists on the CPU dry-run, so optimization steers by the
+lowered IR (the §Perf methodology): largest live tensors (memory suspects),
+per-opcode byte totals (fusion/dtype waste), collective inventory, and
+duplicate-computation hints (remat recompute).
+
+  PYTHONPATH=src python -m repro.roofline.hlo_profile --arch X --shape Y
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[\w\[\],{}\s]+?))\s*"
+    r"([\w\-]+)\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def top_tensors(hlo: str, k: int = 20):
+    """Largest instruction outputs (per-device bytes) with opcode."""
+    rows = []
+    for m in _INSTR_RE.finditer(hlo):
+        name, shape_str, opcode = m.groups()
+        b = shape_bytes(shape_str)
+        if b:
+            rows.append((b, opcode, name, shape_str.strip()[:90]))
+    rows.sort(reverse=True)
+    # dedupe identical (opcode, shape) repeats into counts
+    agg = Counter()
+    first = {}
+    for b, opcode, name, s in rows:
+        key = (opcode, s, b)
+        agg[key] += 1
+        first.setdefault(key, name)
+    out = sorted(((b * c, b, c, opcode, s) for (opcode, s, b), c in agg.items()),
+                 reverse=True)
+    return out[:k]
+
+
+def opcode_bytes(hlo: str, k: int = 15):
+    """Total output bytes per opcode — dtype/fusion waste hotspots."""
+    agg = defaultdict(lambda: [0, 0])
+    for m in _INSTR_RE.finditer(hlo):
+        _, shape_str, opcode = m.groups()
+        b = shape_bytes(shape_str)
+        agg[opcode][0] += b
+        agg[opcode][1] += 1
+    rows = sorted(((v[0], v[1], op) for op, v in agg.items()), reverse=True)
+    return rows[:k]
+
+
+def report(hlo: str, k: int = 20) -> str:
+    lines = ["== largest tensors (bytes x count) =="]
+    for tot, b, c, opcode, s in top_tensors(hlo, k):
+        lines.append(f"  {tot/2**30:8.3f} GiB  {c:4d}x {b/2**20:9.2f} MiB  "
+                     f"{opcode:18s} {s}")
+    lines.append("== bytes by opcode ==")
+    for tot, c, opcode in opcode_bytes(hlo, k):
+        lines.append(f"  {tot/2**30:8.3f} GiB  {c:5d} ops  {opcode}")
+    return "\n".join(lines)
+
+
+def main():
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+    from repro.launch import dryrun as dr
+    res = dr.lower_cell(args.arch, args.shape, multi_pod=args.multipod,
+                        verbose=False, extrapolate=False, keep_hlo=True)
+    print("peak GiB/dev:", res["memory"]["peak_per_device_GiB"])
+    print(report(res["_hlo"], args.top))
+
+
+if __name__ == "__main__":
+    main()

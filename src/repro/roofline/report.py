@@ -1,0 +1,83 @@
+"""Render the dry-run JSON cache into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.roofline.report [--mesh 16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def load(mesh: str) -> list[dict]:
+    d = os.path.join(RESULTS_DIR, mesh)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mem/dev GiB | t_comp | t_mem | t_coll | "
+           "bottleneck | useful | MFU bound |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        roof = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory']['peak_per_device_GiB']:.2f} "
+            f"| {fmt_s(roof['t_compute_s'])} | {fmt_s(roof['t_memory_s'])} "
+            f"| {fmt_s(roof['t_collective_s'])} | {roof['bottleneck']} "
+            f"| {roof['useful_flops_ratio']:.2f} "
+            f"| {roof['mfu_bound']*100:.1f}% |")
+    return hdr + "\n".join(lines)
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compile | args GiB | temp GiB | "
+           "collective counts |\n|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        c = r["collectives"]["counts"]
+        cc = " ".join(f"{k.split('-')[-1] if False else k}:{v}"
+                      for k, v in sorted(c.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compile_s']:.0f}s | {r['memory']['argument_GiB']:.2f} "
+            f"| {r['memory']['temp_GiB']:.2f} | {cc} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--kind", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if not rows:
+        print(f"(no results for mesh {args.mesh})")
+        return
+    print(roofline_table(rows) if args.kind == "roofline"
+          else dryrun_table(rows))
+
+
+if __name__ == "__main__":
+    main()

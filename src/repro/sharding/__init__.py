@@ -1,0 +1,1 @@
+from .policy import Policy  # noqa: F401

@@ -1,0 +1,159 @@
+"""Sharding policy: logical tensor axes -> mesh PartitionSpecs.
+
+The production mesh is (pod, data, model) (launch/mesh.py).  Logical axes:
+
+  batch   -> (pod, data)          data parallelism (pod = cross-pod DP)
+  seq     -> model                sequence parallelism for residuals (SP)
+  heads   -> model                tensor parallelism (paper §4 affine P_fo)
+  ff      -> model                TP on FFN hidden   (paper §4 affine P_fo)
+  experts -> model                expert parallelism (paper all-to-all)
+  vocab   -> model                TP on embedding / lm head
+  fsdp    -> data (+pod)          ZeRO-3 parameter sharding: the per-layer
+                                   gather is the paper's broadcast B, the
+                                   gradient reduce-scatter its adjoint R
+  kvdim   -> model                decode KV-cache head_dim sharding
+
+Activations are constrained (``constrain``) at block boundaries; parameters
+get specs from ``param_spec`` rules.  On a 1-device mesh every spec
+degenerates gracefully, so the same model code runs CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Policy:
+    mesh: Mesh
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: str | None = None          # set on the multi-pod mesh
+    fsdp: bool = True                    # ZeRO-3 param sharding over data
+    fsdp_over_pod: bool = False          # also shard params over pod axis
+    seq_shard: bool = True               # SP: residuals sharded over model
+    explicit_tp: bool = False            # route TP matmuls through shard_map
+    explicit_moe: bool = True            # MoE via shard_map all_to_all (EP)
+    kv_layout: str = "kvdim"             # decode cache: "kvdim" shards
+                                         # head_dim; "kvseq" shards sequence
+                                         # (flash-decoding combine)
+
+    # ---- logical -> physical -------------------------------------------------
+    def phys(self, logical: str | None):
+        if logical is None or logical == "none":
+            return None
+        if logical == "batch":
+            return ((self.pod_axis, self.data_axis)
+                    if self.pod_axis else self.data_axis)
+        if logical == "seq":
+            return self.model_axis if self.seq_shard else None
+        if logical in ("heads", "ff", "experts", "vocab", "kvdim", "kvseq",
+                       "model"):
+            return self.model_axis
+        if logical == "fsdp":
+            if not self.fsdp:
+                return None
+            return ((self.pod_axis, self.data_axis)
+                    if self.fsdp_over_pod and self.pod_axis else self.data_axis)
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def spec(self, *logical) -> P:
+        return P(*(self.phys(l) for l in logical))
+
+    def sharding(self, *logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def constrain(self, x, *logical):
+        return jax.lax.with_sharding_constraint(x, self.sharding(*logical))
+
+    # ---- axis sizes ----------------------------------------------------------
+    def axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[name]
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_size(self.model_axis)
+
+    @property
+    def dp_size(self) -> int:
+        n = self.axis_size(self.data_axis)
+        if self.pod_axis:
+            n *= self.axis_size(self.pod_axis)
+        return n
+
+    # ---- parameter spec rules ------------------------------------------------
+    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """Rules keyed on the parameter's path suffix.
+
+        Stacked (scanned) parameters carry a leading layer dim -> prepend
+        None.  Divisibility is checked; non-divisible dims fall back to
+        replication (e.g. tiny per-head scalars).
+        """
+        stacked = path.startswith("blocks/")
+        name = path.rsplit("/", 1)[-1]
+        rules = {
+            # attention
+            "wq": ("fsdp", "heads"), "wk": ("fsdp", "heads"),
+            "wv": ("fsdp", "heads"), "wo": ("heads", "fsdp"),
+            # dense mlp
+            "w_up": ("fsdp", "ff"), "w_gate": ("fsdp", "ff"),
+            "w_down": ("ff", "fsdp"),
+            # moe
+            "router": (None, None),
+            "we_up": ("experts", "fsdp", None), "we_gate": ("experts", "fsdp", None),
+            "we_down": ("experts", None, "fsdp"),
+            "ws_up": ("fsdp", "ff"), "ws_gate": ("fsdp", "ff"),
+            "ws_down": ("ff", "fsdp"),
+            # ssm
+            "in_z": ("fsdp", "model"), "in_x": ("fsdp", "model"),
+            "in_B": ("fsdp", None), "in_C": ("fsdp", None),
+            "in_dt": ("fsdp", "model"), "out_proj": ("model", "fsdp"),
+            "conv_w": (None, "model"),
+            "a_log": ("model",), "d_skip": ("model",), "dt_bias": ("model",),
+            "ssm_norm": ("model",),
+            # embeddings / head / norms
+            "embed": ("vocab", "fsdp"), "lm_head": ("fsdp", "vocab"),
+            "norm": (None,), "norm_mixer": (None,), "norm_ffn": (None,),
+            "norm_final": (None,),
+        }
+        logical = rules.get(name, tuple(None for _ in shape))
+        if stacked:
+            logical = (None,) + tuple(logical)
+        # pad / trim to rank
+        logical = tuple(logical)[: len(shape)]
+        logical = logical + (None,) * (len(shape) - len(logical))
+        phys = []
+        for dim, l in zip(shape, logical):
+            ax = self.phys(l)
+            if ax is None:
+                phys.append(None)
+                continue
+            if isinstance(ax, str):
+                sz = self.axis_size(ax)
+            else:
+                sz = 1
+                for a in ax:
+                    sz *= self.axis_size(a)
+            phys.append(ax if dim % sz == 0 else None)
+        return P(*phys)
+
+    def param_shardings(self, params) -> dict:
+        """Pytree of NamedShardings matching a params pytree of arrays or
+        ShapeDtypeStructs."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        out = []
+        for path, leaf in flat:
+            spath = "/".join(_key_str(k) for k in path)
+            out.append(NamedSharding(self.mesh, self.param_spec(spath, leaf.shape)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

@@ -1,0 +1,2 @@
+from .loop import LoopConfig, StragglerMonitor, restart_on_failure, run  # noqa: F401
+from .step import build_loss_fn, build_train_step, cross_entropy, init_train_state  # noqa: F401

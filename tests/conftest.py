@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests/md is executed in a dedicated subprocess with
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 (see test_multidevice.py).
+# The main pytest process must see exactly 1 device (harness requirement), so
+# keep md out of normal collection.
+collect_ignore = []
+if os.environ.get("REPRO_MD_SUITE") != "1":
+    collect_ignore.append("md")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,37 @@
+"""Launch the multi-device suite (tests/md) in a subprocess with 8 host
+devices.
+
+The harness requires the main pytest process to see exactly ONE device
+(XLA_FLAGS is reserved for the dry-run), so the real multi-device validation
+— primitive adjoints under shard_map, distributed-vs-sequential layer
+equivalence — runs in a child interpreter with
+``--xla_force_host_platform_device_count=8``.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.timeout(1800)
+def test_multidevice_suite():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["REPRO_MD_SUITE"] = "1"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", os.path.join(ROOT, "tests", "md"),
+         "-q", "--no-header", "-x"],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1800,
+    )
+    if proc.returncode != 0:
+        sys.stdout.write(proc.stdout[-8000:])
+        sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "multi-device suite failed (see output above)"

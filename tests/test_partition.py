@@ -1,0 +1,157 @@
+"""Partition + halo geometry vs the paper's Appendix B worked examples."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (
+    TensorPartition,
+    balanced_split,
+    compute_halos,
+    conv_output_size,
+    shard_offsets,
+)
+from repro.core.partition import max_halo_widths
+
+
+def test_balanced_split_matches_numpy_array_split():
+    for n in [1, 5, 11, 20, 37, 128]:
+        for p in [1, 2, 3, 5, 7]:
+            if p > n:
+                continue
+            ours = balanced_split(n, p)
+            ref = [len(a) for a in np.array_split(np.arange(n), p)]
+            assert ours == ref, (n, p)
+
+
+def test_conv_output_size():
+    assert conv_output_size(11, 5, padding=2) == 11
+    assert conv_output_size(11, 5) == 7
+    assert conv_output_size(11, 2, stride=2) == 5
+    assert conv_output_size(20, 2, stride=2) == 10
+    assert conv_output_size(10, 3, dilation=2) == 6
+
+
+class TestAppendixB:
+    """Exact reproductions of the paper's Appendix B halo structures."""
+
+    def test_B2_normal_convolution_uniform_halos(self):
+        # k=5 centered kernel, n=11, P=3, zero-padding width 2 => uniform
+        # width-2 halos (boundary sides covered by global padding).
+        specs = compute_halos(11, 3, 5, padding=2)
+        assert [s.left_halo for s in specs] == [0, 2, 2]
+        assert [s.right_halo for s in specs] == [2, 2, 0]
+        assert all(s.left_unused == 0 and s.right_unused == 0 for s in specs)
+
+    def test_B3_unbalanced_convolution(self):
+        # k=5 centered kernel, no padding: first/last workers have large
+        # one-sided halos; the middle worker has small balanced halos.
+        specs = compute_halos(11, 3, 5)
+        assert (specs[0].left_halo, specs[0].right_halo) == (0, 3)
+        assert (specs[1].left_halo, specs[1].right_halo) == (1, 1)
+        assert (specs[2].left_halo, specs[2].right_halo) == (3, 0)
+
+    def test_B4_simple_unbalanced_pooling(self):
+        # k=2 right-looking kernel, stride 2, n=11, P=3.  Workers 0 and 1
+        # need no halos; the last worker owns unused bulk entries that must
+        # be trimmed before the local pool (paper: "extra input ... has to be
+        # removed").  (The B4 figure's middle-worker halo arises from a
+        # different input-offset convention; the complex case B5 below pins
+        # our convention exactly on all six workers.)
+        specs = compute_halos(11, 3, 2, stride=2)
+        assert (specs[0].left_halo, specs[0].right_halo) == (0, 0)
+        assert (specs[0].left_unused, specs[0].right_unused) == (0, 0)
+        assert (specs[1].left_halo, specs[1].right_halo) == (0, 0)
+        assert (specs[2].left_halo, specs[2].right_halo) == (0, 0)
+        # global input 10 is unused (outputs stop at input 9)
+        assert specs[2].right_unused == 1
+
+    def test_B5_complex_unbalanced_pooling(self):
+        # k=2 right-looking kernel, stride 2, n=20, P=6 — matches the
+        # paper's prose for every worker:
+        specs = compute_halos(20, 6, 2, stride=2)
+        # "For the first and second workers, there are no halos."
+        for i in (0, 1):
+            assert (specs[i].left_halo, specs[i].right_halo) == (0, 0)
+            assert (specs[i].left_unused, specs[i].right_unused) == (0, 0)
+        # "The third worker has a right halo but no left halo."
+        assert (specs[2].left_halo, specs[2].right_halo) == (0, 1)
+        # "The 4th worker has 1 extra input on the left and a halo of
+        #  length 2 on the right."
+        assert specs[3].left_unused == 1
+        assert (specs[3].left_halo, specs[3].right_halo) == (0, 2)
+        # "The 5th worker has 2 extra input on the left and a halo of
+        #  length 1 on the right."
+        assert specs[4].left_unused == 2
+        assert (specs[4].left_halo, specs[4].right_halo) == (0, 1)
+        # "The final worker has no halos, but one extra input on the left."
+        assert (specs[5].left_halo, specs[5].right_halo) == (0, 0)
+        assert specs[5].left_unused == 1
+
+    def test_causal_conv1d_one_sided_halo(self):
+        # Sequence-parallel depthwise causal conv (Mamba/Jamba under SP):
+        # every worker needs a (k-1)-wide left halo; worker 0's comes from
+        # causal zero padding.
+        specs = compute_halos(4096, 16, 4, padding=3)
+        # causal padding means output size = n with left pad 3 -> here we
+        # model symmetric pad for geometry; the layer itself is one-sided.
+        assert all(s.left_halo <= 3 for s in specs)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(8, 256),
+    p=st.integers(1, 8),
+    k=st.integers(1, 7),
+    stride=st.integers(1, 3),
+    dilation=st.integers(1, 2),
+    pad=st.integers(0, 3),
+)
+def test_halo_coverage_property(n, p, k, stride, dilation, pad):
+    """Property (paper's correctness invariant): every worker's bulk + halos
+    minus unused trims covers exactly the input range its outputs need, and
+    the output ranges tile the full output."""
+    m = conv_output_size(n, k, stride, dilation, pad)
+    if m < p or n < p:
+        return
+    specs = compute_halos(n, p, k, stride, dilation, pad)
+    # outputs tile [0, m)
+    assert specs[0].out[0] == 0 and specs[-1].out[1] == m
+    for a, b in zip(specs, specs[1:]):
+        assert a.out[1] == b.out[0]
+    for s in specs:
+        lo = s.bulk[0] - s.left_halo + s.left_unused
+        hi = s.bulk[1] + s.right_halo - s.right_unused
+        assert (lo, hi) == s.needed
+    # The paper's adjacency assumption ("sensibly decomposed, relative to
+    # kernel size") is an explicit precondition, not a theorem: the helper
+    # must detect violations, and when it reports sensible, halos must fit
+    # within the adjacent neighbour's bulk.
+    from repro.core.partition import is_sensible_decomposition
+    if is_sensible_decomposition(specs):
+        for s in specs:
+            if s.index > 0:
+                prev = specs[s.index - 1]
+                assert s.left_halo <= prev.bulk[1] - prev.bulk[0]
+            if s.index < p - 1:
+                nxt = specs[s.index + 1]
+                assert s.right_halo <= nxt.bulk[1] - nxt.bulk[0]
+
+
+def test_tensor_partition_ranges():
+    tp = TensorPartition((8, 11), (2, 3))
+    assert tp.num_workers == 6
+    assert tp.coords(4) == (1, 1)
+    assert tp.rank((1, 1)) == 4
+    r = tp.subtensor_range(0)
+    assert r == [(0, 4), (0, 4)]
+    r = tp.subtensor_range(5)
+    assert r == [(4, 8), (8, 11)]
+    assert tp.local_shape(0) == (4, 4)
+    assert not tp.is_uniform()
+    assert TensorPartition((8, 12), (2, 3)).is_uniform()
+
+
+def test_max_halo_widths():
+    specs = compute_halos(11, 3, 5)
+    assert max_halo_widths(specs) == (3, 3)

@@ -1,0 +1,72 @@
+"""Serving engine: prefill+decode vs full forward, greedy determinism,
+batched generation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import forward, init_params
+from repro.serve import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("glm4-9b"))
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    engine = ServeEngine(cfg, params, None, max_seq=64, batch_size=2)
+    return cfg, params, engine
+
+
+def test_generate_matches_teacher_forcing(setup):
+    """Greedy generation must agree with argmax over a full forward pass on
+    the generated prefix (cache correctness end-to-end)."""
+    cfg, params, engine = setup
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                cfg.vocab_size)
+    out = engine.generate(prompt, steps=8, greedy=True)
+    assert out.shape == (2, 8)
+
+    seq = jnp.concatenate([prompt, out], axis=1)
+    logits, _, _ = forward(params, {"tokens": seq}, cfg, None, mode="train")
+    for t in range(8):
+        expect = jnp.argmax(logits[:, 16 + t - 1], axis=-1)
+        np.testing.assert_array_equal(np.asarray(out[:, t]),
+                                      np.asarray(expect))
+
+
+def test_generate_deterministic(setup):
+    cfg, params, engine = setup
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                cfg.vocab_size)
+    a = engine.generate(prompt, steps=6, greedy=True)
+    b = engine.generate(prompt, steps=6, greedy=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sampling_path(setup):
+    cfg, params, engine = setup
+    prompt = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0,
+                                cfg.vocab_size)
+    out = engine.generate(prompt, steps=4, greedy=False,
+                          key=jax.random.PRNGKey(0), temperature=0.8)
+    assert out.shape == (2, 4)
+    assert int(out.min()) >= 0 and int(out.max()) < cfg.vocab_size
+
+
+def test_ssm_generation():
+    """Mamba2 decode via the O(1) state recurrence agrees with
+    teacher-forced argmax (state-passing correctness)."""
+    cfg = reduced(get_config("mamba2-370m"))
+    params = init_params(cfg, jax.random.PRNGKey(5))
+    engine = ServeEngine(cfg, params, None, max_seq=48, batch_size=2)
+    prompt = jax.random.randint(jax.random.PRNGKey(6), (2, 12), 0,
+                                cfg.vocab_size)
+    out = engine.generate(prompt, steps=6, greedy=True)
+    seq = jnp.concatenate([prompt, out], axis=1)
+    logits, _, _ = forward(params, {"tokens": seq}, cfg, None, mode="train")
+    for t in range(6):
+        expect = jnp.argmax(logits[:, 12 + t - 1], axis=-1)
+        np.testing.assert_array_equal(np.asarray(out[:, t]),
+                                      np.asarray(expect))
