@@ -28,6 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 ROWS = []
 
 
@@ -47,13 +49,11 @@ def timeit(fn, *args, iters=20, warmup=3):
 
 
 def mesh1d():
-    return jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((8,), ("model",))
 
 
 def mesh2d():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 4), ("data", "model"))
 
 
 # ---------------------------------------------------------------------------
@@ -99,8 +99,7 @@ def bench_lenet_equiv():
     from repro.models.lenet import (lenet_apply_distributed,
                                     lenet_apply_sequential, lenet_init,
                                     synthetic_mnist)
-    mesh = jax.make_mesh((2, 2), ("fo", "fi"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 2), ("fo", "fi"))
     key = jax.random.PRNGKey(0)
     params_d = lenet_init(key)
     params_s = jax.tree_util.tree_map(jnp.copy, params_d)
@@ -208,6 +207,71 @@ def bench_layer_micro():
     emit("layer_micro/ring_ag_matmul", us_ring, f"unfused_us={us_unf:.1f}")
 
 
+def bench_fused_vs_unfused():
+    """Tentpole perf check: a 2-matmul TP block (gather-affine -> relu ->
+    scatter-affine) three ways —
+
+      per_layer   seed style: one shard_map per matmul
+      dist_jit    ONE shard_map over the whole block, unfused collectives
+      dist_jit+ring  ONE shard_map + ring collective-matmul overlap
+                     (policy.explicit_tp)
+
+    Same math, fp32-identical outputs; times are us/call fwd and fwd+grad.
+    """
+    from repro.core import layers as L, primitives as prim
+    from repro.core.compile import dist_jit
+    from repro.sharding import Partitioned, Policy
+
+    m = mesh1d()
+    B, D, F = 32, 1024, 2048
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, D))
+    w_up = jax.random.normal(jax.random.PRNGKey(1), (D, F)) * 0.02
+    w_dn = jax.random.normal(jax.random.PRNGKey(2), (F, D)) * 0.02
+
+    def body(x, w_up, w_dn):
+        h = jax.nn.relu(L.affine_gather(x, w_up, axis="model"))
+        return L.affine_scatter(h, w_dn, axis="model")
+
+    in_parts = (Partitioned(None, "model"), Partitioned(None, "model"),
+                Partitioned("model", None))
+    out_part = Partitioned(None, "model")
+
+    # seed style: one shard_map per layer
+    up = prim.smap(lambda x, w: prim.all_gather(x, "model", 1) @ w, m,
+                   (P(None, "model"), P(None, "model")), P(None, "model"))
+    dn = prim.smap(lambda h, w: prim.reduce_scatter(h @ w, "model", 1), m,
+                   (P(None, "model"), P("model", None)), P(None, "model"))
+    per_layer = jax.jit(lambda x, wu, wd: dn(jax.nn.relu(up(x, wu)), wd))
+
+    fused = dist_jit(body, Policy.for_mesh(m, explicit_tp=False),
+                     in_parts, out_part)
+    ring = dist_jit(body, Policy.for_mesh(m, explicit_tp=True),
+                    in_parts, out_part)
+
+    ref = np.asarray(per_layer(x, w_up, w_dn))
+    for name, f in [("dist_jit", fused), ("dist_jit_ring", ring)]:
+        np.testing.assert_allclose(np.asarray(f(x, w_up, w_dn)), ref,
+                                   rtol=2e-4, atol=2e-4)
+
+    base = timeit(per_layer, x, w_up, w_dn)
+    emit("fused_vs_unfused/fwd/per_layer", base, "speedup_vs_per_layer=1.00x")
+    for name, f in [("dist_jit", fused), ("dist_jit_ring", ring)]:
+        us = timeit(f, x, w_up, w_dn)
+        emit(f"fused_vs_unfused/fwd/{name}", us,
+             f"speedup_vs_per_layer={base/us:.2f}x")
+
+    def make_grad(f):
+        return jax.jit(jax.grad(
+            lambda wu: (f(x, wu, w_dn).astype(jnp.float32) ** 2).sum()))
+
+    gbase = timeit(make_grad(per_layer), w_up)
+    emit("fused_vs_unfused/grad/per_layer", gbase, "speedup_vs_per_layer=1.00x")
+    for name, f in [("dist_jit", fused), ("dist_jit_ring", ring)]:
+        us = timeit(make_grad(f), w_up)
+        emit(f"fused_vs_unfused/grad/{name}", us,
+             f"speedup_vs_per_layer={gbase/us:.2f}x")
+
+
 def bench_train_micro():
     from repro.configs import ModelConfig
     from repro.data import DataConfig, SyntheticLM
@@ -243,6 +307,7 @@ BENCHES = {
     "halo_appendix_b": bench_halo_appendix_b,
     "prim_micro": bench_prim_micro,
     "layer_micro": bench_layer_micro,
+    "fused_vs_unfused": bench_fused_vs_unfused,
     "train_micro": bench_train_micro,
 }
 

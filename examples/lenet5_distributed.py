@@ -19,8 +19,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+
+from repro import compat
 from repro.models.lenet import (lenet_apply_distributed,
                                 lenet_apply_sequential, lenet_init,
                                 synthetic_mnist, table1_local_shapes)
@@ -32,8 +33,7 @@ def main():
     ap.add_argument("--batch", type=int, default=64)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((2, 2), ("fo", "fi"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 2), ("fo", "fi"))
     print("paper Table 1 per-worker affine shapes:", table1_local_shapes())
 
     key = jax.random.PRNGKey(0)

@@ -1,9 +1,10 @@
-"""Quickstart: the paper's primitives in 60 seconds.
+"""Quickstart: the paper's operator algebra in 60 seconds.
 
 Builds a distributed 2-layer MLP from the paper's §4 affine algorithm on a
-2x4 mesh (8 host devices), verifies every operator with the paper's Eq. 13
-adjoint test, and takes a few gradient steps — distributed and sequential
-losses match to float tolerance.
+2x4 mesh (8 host devices) — the WHOLE network in one ``dist_jit`` region
+with ``Partitioned`` logical specs — verifies the operators with the
+paper's Eq. 13 adjoint test (``check_adjoint``), and takes a few gradient
+steps: distributed and sequential losses match to float tolerance.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 (sets XLA_FLAGS itself to get 8 host devices)
@@ -18,28 +19,32 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.core import adjoint_test
+from repro import compat
+from repro.core import check_adjoint, linop
 from repro.core import layers as L
-from repro.core import primitives as prim
+from repro.core.compile import dist_jit
+from repro.sharding import Partitioned, Policy
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("fo", "fi"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("fo", "fi"))
     key = jax.random.PRNGKey(0)
     k1, k2, k3, k4 = jax.random.split(key, 4)
 
-    # --- 1. the paper's Eq. 13 adjoint test on the primitives -------------
-    print("== adjoint tests (paper Eq. 13) ==")
-    f = prim.smap(lambda x: prim.sum_reduce(x, "fi"), mesh, P(None, "fi"), P())
-    print(" sum_reduce     :", adjoint_test(f, jax.random.normal(k1, (4, 8))))
-    g = prim.smap(lambda x: prim.halo_exchange(x, "fi", 0, 1, 1),
-                  mesh, P("fi"), P("fi"))
-    print(" halo_exchange  :", adjoint_test(g, jax.random.normal(k2, (16,))))
+    # --- 1. the operator algebra + the paper's Eq. 13 adjoint test --------
+    print("== operator algebra (paper Eq. 13, check_adjoint) ==")
+    R = linop.SumReduce("fi")
+    H = linop.HaloExchange("fi", 0, 1, 1)
+    print(" sum_reduce       :", check_adjoint(R, mesh, (16, 3)))
+    print(" halo_exchange    :", check_adjoint(H, mesh, (16, 3)))
+    chain = H @ linop.SendRecv("fi", 1) @ linop.AllGather("fi", 0)
+    print(" composite chain  :", check_adjoint(chain, mesh, (16, 3)))
+    print(" reversal law     : (A@B).T == B.T @ A.T ->",
+          chain.T == (linop.AllGather("fi", 0).T @ linop.SendRecv("fi", 1).T
+                      @ H.T))
 
-    # --- 2. a distributed MLP from the §4 affine algorithm ----------------
+    # --- 2. a distributed MLP: ONE dist_jit region, Partitioned specs -----
     w1 = jax.random.normal(k1, (64, 32)) * 0.1   # P_fo x P_fi partitioned
     b1 = jnp.zeros((64,))
     w2 = jax.random.normal(k2, (10, 64)) * 0.1
@@ -47,11 +52,26 @@ def main():
     x = jax.random.normal(k3, (16, 32))
     y = jax.nn.one_hot(jax.random.randint(k4, (16,), 0, 10), 10)
 
+    policy = Policy.for_mesh(mesh)
+    w_part = Partitioned("fo", "fi")
+    b_part = Partitioned("fo")
+
+    def mlp_body(params, x):
+        """Local-shard body: restriction glue + two §4 affine chains."""
+        w1, b1, w2, b2 = params
+        h = L.affine(L.shard_slice(x, "fi", -1), w1, b1,
+                     fo_axis="fo", fi_axis="fi")
+        h = jax.nn.relu(h)
+        h = linop.AllGather("fo", 1)(h)          # fo -> fi repartition glue
+        return L.affine(L.shard_slice(h, "fi", -1), w2, b2,
+                        fo_axis="fo", fi_axis="fi")
+
+    mlp = dist_jit(mlp_body, policy,
+                   ((w_part, b_part, w_part, b_part), None),
+                   Partitioned(None, "fo"), jit=False)
+
     def dist_loss(params):
-        (w1, b1, w2, b2) = params
-        h = jax.nn.relu(L.dist_affine(mesh, x, w1, b1, fo_axis="fo", fi_axis="fi"))
-        o = L.dist_affine(mesh, h, w2, b2, fo_axis="fo", fi_axis="fi")
-        return ((o - y) ** 2).mean()
+        return ((mlp(params, x) - y) ** 2).mean()
 
     def seq_loss(params):
         (w1, b1, w2, b2) = params

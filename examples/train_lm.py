@@ -9,7 +9,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
 
 import argparse
-import dataclasses
 import os
 import sys
 

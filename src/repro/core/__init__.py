@@ -3,17 +3,32 @@
 - ``memory``      linear memory ops + adjoints            (paper §2, App. A)
 - ``partition``   balanced decomposition + halo geometry  (paper §3, App. B)
 - ``primitives``  parallel data movement + manual adjoints (paper §3)
+- ``linop``       the operator algebra: composable adjoint-aware LinearOps
 - ``adjoint``     the Eq. 13 coherence test harness
 - ``layers``      distributed affine/conv/pool/embedding   (paper §4)
+- ``compile``     dist_jit: whole-block fusion into one shard_map
 - ``overlap``     ring collective-matmul compute/comm overlap (beyond paper)
 """
 
-from . import adjoint, layers, memory, overlap, partition, primitives  # noqa: F401
+from . import (  # noqa: F401
+    adjoint,
+    compile,
+    layers,
+    linop,
+    memory,
+    overlap,
+    partition,
+    primitives,
+)
 
 from .adjoint import adjoint_test, inner, norm  # noqa: F401
+from .compile import dist_jit  # noqa: F401
+from .linop import check_adjoint  # noqa: F401
 from .partition import (  # noqa: F401
     TensorPartition,
     balanced_split,
     compute_halos,
     conv_output_size,
+    is_sensible_decomposition,
+    max_halo_widths,
 )

@@ -1,0 +1,92 @@
+"""dist_jit: compile a whole block body into ONE shard_map.
+
+The seed opened a fresh ``shard_map`` per layer, so XLA could never overlap
+one layer's collective with a neighbour's compute.  ``dist_jit`` lifts an
+ENTIRE block body into a single manual region: callers declare logical
+partitions (``Partitioned`` specs resolved through ``sharding.Policy``) for
+the boundary, and every layer inside runs in its SPMD-local form — the
+context-aware layer API in ``core/layers.py`` detects the active
+``DistContext`` and skips re-wrapping.
+
+When ``policy.explicit_tp`` is set, the gather/scatter affine forms inside
+the region select the ring collective-matmuls from ``core/overlap.py``, so
+ICI transfers overlap MXU work across the whole fused body (forward AND
+backward — the rings differentiate to the matching reverse rings).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.sharding.spec import Partitioned
+
+__all__ = ["DistContext", "current_ctx", "dist_jit", "resolve_parts"]
+
+
+@dataclass(frozen=True)
+class DistContext:
+    """Active while tracing a dist_jit body: layers read the policy (axis
+    bindings, explicit_tp, ...) from here instead of taking a mesh arg."""
+
+    policy: Any
+
+
+_STACK: list[DistContext] = []
+
+
+def current_ctx() -> DistContext | None:
+    return _STACK[-1] if _STACK else None
+
+
+def resolve_parts(parts, policy):
+    """Resolve a pytree of ``Partitioned`` / ``PartitionSpec`` / ``None``
+    (None = fully replicated) into a matching pytree of PartitionSpecs.
+
+    Handled manually rather than via tree_map because ``None`` is both a
+    valid spec leaf and an empty pytree."""
+    if parts is None:
+        return P()
+    if isinstance(parts, Partitioned):
+        return parts.resolve(policy)
+    if isinstance(parts, P):
+        return parts
+    if isinstance(parts, dict):
+        return {k: resolve_parts(v, policy) for k, v in parts.items()}
+    if isinstance(parts, (tuple, list)):
+        return tuple(resolve_parts(v, policy) for v in parts)
+    raise TypeError(f"cannot resolve partition declaration {parts!r}")
+
+
+def dist_jit(fn, policy, in_parts, out_parts, *, jit: bool = True):
+    """Run ``fn`` inside ONE shard_map over ``policy.mesh``.
+
+    Args:
+      fn: the block body; positional args arrive as local shards.  Layer
+          calls inside use the context-aware API (``layers.affine`` etc.).
+      policy: ``sharding.Policy`` — supplies the mesh, logical-axis
+          resolution, and dispatch flags (``explicit_tp`` selects the ring
+          collective-matmul forms).
+      in_parts / out_parts: pytrees of ``Partitioned`` (or raw
+          PartitionSpec / None) declaring the boundary layout of fn's
+          args / results.
+      jit: wrap the mapped function in jax.jit (disable for the thin legacy
+          shims that are called under an outer jit already).
+    """
+    mesh = policy.mesh
+    in_specs = resolve_parts(in_parts, policy)
+    out_specs = resolve_parts(out_parts, policy)
+
+    def body(*args):
+        _STACK.append(DistContext(policy))
+        try:
+            return fn(*args)
+        finally:
+            _STACK.pop()
+
+    mapped = compat.shard_map(body, mesh, in_specs, out_specs)
+    return jax.jit(mapped) if jit else mapped

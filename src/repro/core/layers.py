@@ -1,4 +1,4 @@
-"""Model-parallel layers composed from the paper's primitives (paper §4).
+"""Model-parallel layers composed from the operator algebra (paper §4).
 
 Each layer follows the paper's algorithm verbatim, with the MPI partition
 replaced by named mesh axes (DESIGN.md §2):
@@ -8,11 +8,23 @@ replaced by named mesh axes (DESIGN.md §2):
   pool    (sparse): x = H x  ->  local pool                        (§4 Sparse)
   embedding:        local masked lookup -> R (vocab-partitioned)
 
-The broadcasts are identities in SPMD (sources are replicated over the
-relevant axes) but carry the *adjoint* sum-reductions that make gradients of
-replicated tensors correct — the paper's central observation.  Point-wise
-layers need no intervention (§4: "embarrassingly parallel") and use native
-ops.
+TWO API LEVELS:
+
+1. Context-aware layer functions (``affine``, ``conv_same``, ``pool``,
+   ``conv1d_causal``, ``embedding``, ``affine_gather``, ``affine_scatter``)
+   run on SPMD-local shards inside a ``dist_jit`` region (core/compile.py).
+   Axis arguments are LOGICAL names resolved through the active policy
+   (``sharding.Partitioned`` declarations fix the region boundary), so an
+   entire block body fuses into one shard_map and — when
+   ``policy.explicit_tp`` — the gather/scatter affines select the ring
+   collective-matmuls of core/overlap.py.
+
+2. Legacy ``dist_(mesh, ...)`` wrappers keep the seed's one-shard_map-
+   per-layer signatures as THIN DEPRECATION SHIMS, each now routed through
+   ``dist_jit``.  New code should declare partitions once and fuse.
+
+Data movement inside layer bodies is expressed with ``core.linop``
+operators (HaloExchange, ...), so adjoint pairing lives in one place.
 
 Weight partitions follow the paper: affine weights live on a
 ``P_fo x P_fi`` partition; the bias lives on one ``P_fo x 1`` subpartition
@@ -22,17 +34,29 @@ the bias only where ``axis_index(fi) == 0``.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from repro.sharding import Partitioned, Policy
+
+from . import linop
+from . import overlap
 from . import primitives as prim
-from .partition import compute_halos, max_halo_widths
+from .compile import current_ctx, dist_jit
 
 __all__ = [
+    # context-aware API (call inside dist_jit)
+    "affine",
+    "affine_gather",
+    "affine_scatter",
+    "conv_same",
+    "conv1d_causal",
+    "pool",
+    "embedding",
+    "shard_slice",
+    # legacy one-shard_map-per-layer shims (deprecated)
     "dist_affine",
     "dist_affine_fn",
     "dist_conv1d_causal",
@@ -42,24 +66,59 @@ __all__ = [
 ]
 
 
+def _ax(name):
+    """Resolve a logical/physical axis name through the active DistContext
+    (identity when no context or the name is already a mesh axis)."""
+    ctx = current_ctx()
+    if ctx is None or name is None:
+        return name
+    return ctx.policy.resolve_axis(name)
+
+
+def _explicit_tp() -> bool:
+    ctx = current_ctx()
+    return ctx is not None and getattr(ctx.policy, "explicit_tp", False)
+
+
+def shard_slice(x, axis, dim: int):
+    """Restriction to this worker's block along ``dim`` — the transpose-glue
+    half of a repartition (adjoint: zero-pad back, handled by AD)."""
+    axis = _ax(axis)
+    if axis is None:
+        return x
+    k = prim.axis_size(axis)
+    n = x.shape[dim]
+    assert n % k == 0, (n, k)
+    i = jax.lax.axis_index(axis)
+    return jax.lax.dynamic_slice_in_dim(x, i * (n // k), n // k, axis=dim)
+
+
 # ---------------------------------------------------------------------------
 # Dense layer (paper §4 "Dense layers"): y = W x + b on a P_fo x P_fi grid.
 # ---------------------------------------------------------------------------
 
-def dist_affine_fn(x, w, b, *, fo_axis: str, fi_axis: str | None):
-    """Body of the paper's Forward Affine Algorithm; call inside shard_map.
+def affine(x, w, b=None, *, fo_axis: str | None, fi_axis: str | None):
+    """The paper's Forward Affine Algorithm on local shards.
 
     Shapes (local): x (..., n_fi_loc)  w (n_fo_loc, n_fi_loc)  b (n_fo_loc,).
     x is replicated over ``fo_axis`` and sharded over ``fi_axis``; w is
     sharded over both; the output is sharded over ``fo_axis`` and replicated
     over ``fi_axis``.
+
+    Under ``policy.explicit_tp`` with w's fo dim unsharded, the trailing
+    sum-reduce fuses with the GEMM as a ring matmul-reduce-scatter followed
+    by an all-gather (psum = RS∘AG with the RS leg overlapped).
     """
+    fo_axis, fi_axis = _ax(fo_axis), _ax(fi_axis)
+    if (fi_axis is not None and fo_axis is None and _explicit_tp()
+            and b is None and w.shape[0] % prim.axis_size(fi_axis) == 0):
+        y = overlap.ring_matmul_reducescatter(x, w.T, fi_axis)
+        return prim.all_gather(y, fi_axis, y.ndim - 1)
     # Step 2: x̂ <- B_{Px->Pw} x.  x arrives through a replicated in_spec over
     # ``fo_axis``: the forward broadcast is the SPMD identity and shard_map's
     # boundary transpose performs the paper's B* (sum-reduce over fo) on the
     # cotangent — see primitives.broadcast usage contract.
-    x_hat = x
-    y_hat = jnp.einsum("...i,oi->...o", x_hat, w)
+    y_hat = jnp.einsum("...i,oi->...o", x, w)
     if b is not None:
         if fi_axis is None:
             y_hat = y_hat + b
@@ -72,13 +131,59 @@ def dist_affine_fn(x, w, b, *, fo_axis: str, fi_axis: str | None):
     # Step 4: y <- R_{Pw->Py} ŷ : sum-reduce over the fi axis (psum forward,
     # broadcast adjoint — the paper's R/R* pair).
     if fi_axis is not None:
-        y_hat = prim.sum_reduce(y_hat, fi_axis)
+        y_hat = linop.SumReduce(fi_axis)(y_hat)
     return y_hat
+
+
+def affine_gather(x, w, b=None, *, axis: str):
+    """``all_gather(x, dim=-1) @ w`` (+ b): the partitioned-broadcast affine.
+
+    Local shapes: x (..., f_loc) feature-sharded over ``axis``; w
+    (f_tot, o_loc) with output columns sharded.  Under explicit_tp the
+    gather rides the ring collective-matmul (overlap.py) so each ppermute
+    hop overlaps a partial GEMM; otherwise the unfused B-then-GEMM form.
+    """
+    axis = _ax(axis)
+    if axis is None:
+        y = jnp.einsum("...f,fo->...o", x, w)
+    elif _explicit_tp():
+        y = overlap.ring_allgather_matmul(x, w, axis)
+    else:
+        y = jnp.einsum("...f,fo->...o",
+                       linop.AllGather(axis, x.ndim - 1)(x), w)
+    return y if b is None else y + b
+
+
+def affine_scatter(x, w, b=None, *, axis: str):
+    """``reduce_scatter(x @ w, dim=-1)``: the partitioned-sum-reduce affine.
+
+    Local shapes: x (..., f_loc) the contraction shard; w (f_loc, o_tot).
+    Output (..., o_tot / k) scattered over ``axis``.  Under explicit_tp the
+    scatter rides the ring collective-matmul.
+    """
+    axis = _ax(axis)
+    if axis is None:
+        y = jnp.einsum("...f,fo->...o", x, w)
+    elif _explicit_tp():
+        y = overlap.ring_matmul_reducescatter(x, w, axis)
+    else:
+        y = linop.ReduceScatter(axis, x.ndim - 1)(
+            jnp.einsum("...f,fo->...o", x, w))
+    return y if b is None else y + b
+
+
+def dist_affine_fn(x, w, b, *, fo_axis: str, fi_axis: str | None):
+    """Deprecated alias of ``affine`` (the seed's shard_map body name)."""
+    return affine(x, w, b, fo_axis=fo_axis, fi_axis=fi_axis)
 
 
 def dist_affine(mesh, x, w, b=None, *, fo_axis="model", fi_axis=None,
                 batch_axis=None):
     """Distributed affine layer y = x W^T + b (paper §4 Dense).
+
+    DEPRECATED legacy shim: one shard_map per layer.  Now routed through
+    ``dist_jit`` — new code should declare ``Partitioned`` specs once and
+    fuse whole blocks.
 
     Global shapes: x (..., n_fi), w (n_fo, n_fi), b (n_fo,).
     Partition: w over (fo_axis, fi_axis); x over (batch_axis, fi_axis);
@@ -87,39 +192,44 @@ def dist_affine(mesh, x, w, b=None, *, fo_axis="model", fi_axis=None,
     xdims = [None] * (x.ndim - 1)
     if batch_axis is not None:
         xdims[0] = batch_axis
-    in_specs = (
-        P(*xdims, fi_axis),
-        P(fo_axis, fi_axis),
-    )
+    in_parts = [
+        Partitioned(*xdims, fi_axis),
+        Partitioned(fo_axis, fi_axis),
+    ]
     args = (x, w)
     if b is not None:
-        in_specs = in_specs + (P(fo_axis),)
+        in_parts.append(Partitioned(fo_axis))
         args = args + (b,)
-    out_spec = P(*xdims, fo_axis)
+    out_part = Partitioned(*xdims, fo_axis)
 
     def body(*a):
-        xx, ww = a[0], a[1]
         bb = a[2] if len(a) > 2 else None
-        return dist_affine_fn(xx, ww, bb, fo_axis=fo_axis, fi_axis=fi_axis)
+        return affine(a[0], a[1], bb, fo_axis=fo_axis, fi_axis=fi_axis)
 
-    return prim.smap(body, mesh, in_specs, out_spec)(*args)
+    return dist_jit(body, Policy.for_mesh(mesh), tuple(in_parts), out_part,
+                    jit=False)(*args)
 
 
 # ---------------------------------------------------------------------------
 # Sparse layers (paper §4 "Sparse layers"): halo exchange + local kernel op.
 # ---------------------------------------------------------------------------
 
-def dist_conv1d_causal_fn(x, w, *, seq_axis: str, dim: int = 1):
-    """Causal depthwise conv1d under sequence sharding; call inside shard_map.
+def conv1d_causal(x, w, *, seq_axis: str, dim: int = 1):
+    """Causal depthwise conv1d under sequence sharding, on local shards.
 
     x local (batch, seq_loc, channels); w (k, channels).  The halo is the
     paper's one-sided unbalanced case (App. B4): every worker needs a
     (k-1)-wide LEFT halo; the first worker's missing halo is the causal zero
     padding, which the zero-filled boundary margin provides for free.
     """
+    seq_axis = _ax(seq_axis)
     k = w.shape[0]
-    if k > 1:
-        x = prim.halo_exchange(x, seq_axis, dim, k - 1, 0)
+    if k > 1 and seq_axis is not None:
+        x = linop.HaloExchange(seq_axis, dim, k - 1, 0)(x)
+    elif k > 1:
+        pad = [(0, 0)] * x.ndim
+        pad[dim] = (k - 1, 0)
+        x = jnp.pad(x, pad)
     # local valid causal conv via sliding windows
     out = jnp.zeros((x.shape[0], x.shape[dim] - (k - 1), x.shape[-1]), x.dtype)
     for i in range(k):
@@ -129,84 +239,105 @@ def dist_conv1d_causal_fn(x, w, *, seq_axis: str, dim: int = 1):
     return out
 
 
+dist_conv1d_causal_fn = conv1d_causal  # deprecated alias (seed body name)
+
+
 def dist_conv1d_causal(mesh, x, w, *, seq_axis="model", batch_axis="data"):
-    """Depthwise causal conv1d with the sequence dim sharded over ``seq_axis``."""
-    return prim.smap(
-        partial(dist_conv1d_causal_fn, seq_axis=seq_axis),
-        mesh,
-        (P(batch_axis, seq_axis, None), P(None, None)),
-        P(batch_axis, seq_axis, None),
-    )(x, w)
+    """Depthwise causal conv1d with the sequence dim sharded over
+    ``seq_axis``.  DEPRECATED legacy shim (see dist_affine)."""
+
+    def body(xx, ww):
+        return conv1d_causal(xx, ww, seq_axis=seq_axis)
+
+    return dist_jit(
+        body, Policy.for_mesh(mesh),
+        (Partitioned(batch_axis, seq_axis, None), Partitioned(None, None)),
+        Partitioned(batch_axis, seq_axis, None), jit=False)(x, w)
 
 
-def dist_conv_same(mesh, x, w, b=None, *, spatial_axes: Sequence[str | None],
-                   batch_axis=None, co_axis=None, ci_axis=None):
-    """Distributed D-dim convolution, stride 1, 'same' zero padding
+def conv_same(x, w, b=None, *, spatial_axes: Sequence[str | None],
+              ci_axis: str | None = None):
+    """D-dim convolution on local shards, stride 1, 'same' zero padding
     (paper §4 Forward Convolution Algorithm).
 
-    Global shapes: x (n_b, n_ci, m_0..m_{D-1}), w (n_co, n_ci, k_0..k_{D-1}),
-    b (n_co,).  ``spatial_axes[d]`` names the mesh axis sharding feature dim
-    d (None = not sharded).  Kernels must be odd-sized; the boundary
-    zero-margins from the halo exchange realize the global 'same' padding.
+    Local shapes: x (n_b, ci_loc, m_0..m_{D-1}), w (co_loc, ci_loc,
+    k_0..k_{D-1}), b (co_loc,).  ``spatial_axes[d]`` names the mesh axis
+    sharding feature dim d (None = not sharded).  Kernels must be odd-sized;
+    the boundary zero-margins from the halo exchange realize the global
+    'same' padding.
     """
     D = len(spatial_axes)
     ks = w.shape[2:]
     assert all(k % 2 == 1 for k in ks), "same-conv requires odd kernels"
+    ci_axis = _ax(ci_axis)
 
-    x_spec = P(batch_axis, ci_axis, *spatial_axes)
-    w_spec = P(co_axis, ci_axis, *([None] * D))
-    y_spec = P(batch_axis, co_axis, *spatial_axes)
-    specs = [x_spec, w_spec]
+    # Step 2: halo exchange per sharded spatial dim (nested, Eq. 11).
+    pads = []
+    for d, ax in enumerate(spatial_axes):
+        ax = _ax(ax)
+        h = (ks[d] - 1) // 2
+        if ax is not None and h > 0:
+            x = linop.HaloExchange(ax, 2 + d, h, h)(x)
+            # boundary workers got zero margins == global 'same' padding
+            pads.append((0, 0))
+        else:
+            pads.append((h, h))  # unsharded dim: ordinary local padding
+    # Steps 3-5: broadcasts.  w arrives replicated over batch/spatial axes
+    # and x over co via the region's in_specs: forward broadcasts are SPMD
+    # identities, and shard_map's boundary transpose realizes the adjoint
+    # sum-reduces (paper Eq. 9) — see primitives.broadcast.
+    # Step 6: local conv (valid on halo-augmented tensor).
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1,) * D,
+        padding=pads,
+        dimension_numbers=jax.lax.conv_dimension_numbers(
+            x.shape, w.shape, ("NC" + "DHW"[-D:], "OI" + "DHW"[-D:],
+                               "NC" + "DHW"[-D:])),
+    )
+    # Bias lives on one P_co x 1 subpartition (paper §4): apply it before
+    # the reduction, masked to the ci-root, so the sum counts it once.
+    if b is not None:
+        if ci_axis is None:
+            y = y + b.reshape((1, -1) + (1,) * D)
+        else:
+            on_root = (jax.lax.axis_index(ci_axis) == 0).astype(y.dtype)
+            y = y + b.reshape((1, -1) + (1,) * D) * on_root
+    # Step 7: y <- R over the ci axis.
+    if ci_axis is not None:
+        y = linop.SumReduce(ci_axis)(y)
+    return y
+
+
+def dist_conv_same(mesh, x, w, b=None, *, spatial_axes: Sequence[str | None],
+                   batch_axis=None, co_axis=None, ci_axis=None):
+    """Distributed 'same' convolution.  DEPRECATED legacy shim.
+
+    Global shapes: x (n_b, n_ci, m_0..m_{D-1}), w (n_co, n_ci, k_0..k_{D-1}),
+    b (n_co,).
+    """
+    D = len(spatial_axes)
+    in_parts = [
+        Partitioned(batch_axis, ci_axis, *spatial_axes),
+        Partitioned(co_axis, ci_axis, *([None] * D)),
+    ]
     args = [x, w]
     if b is not None:
-        specs.append(P(co_axis))
+        in_parts.append(Partitioned(co_axis))
         args.append(b)
+    out_part = Partitioned(batch_axis, co_axis, *spatial_axes)
 
     def body(*a):
-        xx, ww = a[0], a[1]
         bb = a[2] if len(a) > 2 else None
-        # Step 2: halo exchange per sharded spatial dim (nested, Eq. 11).
-        pads = []
-        for d, ax in enumerate(spatial_axes):
-            h = (ks[d] - 1) // 2
-            if ax is not None and h > 0:
-                xx = prim.halo_exchange(xx, ax, 2 + d, h, h)
-                # boundary workers got zero margins == global 'same' padding
-                pads.append((0, 0))
-            else:
-                pads.append((h, h))  # unsharded dim: ordinary local padding
-        # Steps 3-5: broadcasts.  w arrives replicated over batch/spatial
-        # axes and x over co via the in_specs: forward broadcasts are SPMD
-        # identities, and shard_map's boundary transpose realizes the
-        # adjoint sum-reduces (paper Eq. 9) — see primitives.broadcast.
-        # Step 6: local conv (valid on halo-augmented tensor).
-        yy = jax.lax.conv_general_dilated(
-            xx, ww, window_strides=(1,) * D,
-            padding=pads,
-            dimension_numbers=jax.lax.conv_dimension_numbers(
-                xx.shape, ww.shape, ("NC" + "DHW"[-D:], "OI" + "DHW"[-D:],
-                                     "NC" + "DHW"[-D:])),
-        )
-        # Bias lives on one P_co x 1 subpartition (paper §4): apply it before
-        # the reduction, masked to the ci-root, so the sum counts it once.
-        if bb is not None:
-            if ci_axis is None:
-                yy = yy + bb.reshape((1, -1) + (1,) * D)
-            else:
-                on_root = (jax.lax.axis_index(ci_axis) == 0).astype(yy.dtype)
-                yy = yy + bb.reshape((1, -1) + (1,) * D) * on_root
-        # Step 7: y <- R over the ci axis.
-        if ci_axis is not None:
-            yy = prim.sum_reduce(yy, ci_axis)
-        return yy
+        return conv_same(a[0], a[1], bb, spatial_axes=spatial_axes,
+                         ci_axis=ci_axis)
 
-    return prim.smap(body, mesh, tuple(specs), y_spec)(*args)
+    return dist_jit(body, Policy.for_mesh(mesh), tuple(in_parts), out_part,
+                    jit=False)(*args)
 
 
-def dist_pool(mesh, x, *, k: int, stride: int, op: str = "max",
-              spatial_axes: Sequence[str | None], batch_axis=None,
-              channel_axis=None):
-    """Distributed pooling (paper §4 Forward Pooling Algorithm).
+def pool(x, *, k: int, stride: int, op: str = "max",
+         spatial_axes: Sequence[str | None]):
+    """Pooling on local shards (paper §4 Forward Pooling Algorithm).
 
     Supports the SPMD-uniform case: every sharded spatial extent divides
     evenly and local extents are stride-aligned, so halos are empty (App. B4
@@ -214,39 +345,46 @@ def dist_pool(mesh, x, *, k: int, stride: int, op: str = "max",
     ``partition.compute_halos`` and validated against App. B in tests.
     """
     D = len(spatial_axes)
-    x_spec = P(batch_axis, channel_axis, *spatial_axes)
+    for d, ax in enumerate(spatial_axes):
+        ax = _ax(ax)
+        if ax is None:
+            continue
+        n_loc = x.shape[2 + d]
+        if n_loc % stride != 0:
+            raise ValueError("pool requires stride-aligned local extents")
+        if k > stride:
+            x = linop.HaloExchange(ax, 2 + d, 0, k - stride)(x)
+    if k == stride:
+        # non-overlapping pool via reshape-reduce: equivalent to
+        # reduce_window and (unlike reduce_window with a custom monoid)
+        # reverse-differentiable inside shard_map.
+        shape = list(x.shape[:2])
+        for d in range(D):
+            shape += [x.shape[2 + d] // k, k]
+        r = x.reshape(shape)
+        axes = tuple(3 + 2 * d for d in range(D))
+        return r.max(axis=axes) if op == "max" else r.mean(axis=axes)
+    init = -jnp.inf if op == "max" else 0.0
+    red = jax.lax.max if op == "max" else jax.lax.add
+    window = (1, 1) + (k,) * D
+    strides = (1, 1) + (stride,) * D
+    y = jax.lax.reduce_window(x, jnp.asarray(init, x.dtype), red,
+                              window, strides, "VALID")
+    if op == "avg":
+        y = y / (k ** D)
+    return y
+
+
+def dist_pool(mesh, x, *, k: int, stride: int, op: str = "max",
+              spatial_axes: Sequence[str | None], batch_axis=None,
+              channel_axis=None):
+    """Distributed pooling.  DEPRECATED legacy shim."""
+    part = Partitioned(batch_axis, channel_axis, *spatial_axes)
 
     def body(xx):
-        for d, ax in enumerate(spatial_axes):
-            if ax is None:
-                continue
-            n_loc = xx.shape[2 + d]
-            if n_loc % stride != 0:
-                raise ValueError("dist_pool requires stride-aligned local extents")
-            if k > stride:
-                xx = prim.halo_exchange(xx, ax, 2 + d, 0, k - stride)
-        if k == stride:
-            # non-overlapping pool via reshape-reduce: equivalent to
-            # reduce_window and (unlike reduce_window with a custom monoid)
-            # reverse-differentiable inside shard_map.
-            shape = list(xx.shape[:2])
-            for d in range(D):
-                shape += [xx.shape[2 + d] // k, k]
-            r = xx.reshape(shape)
-            axes = tuple(3 + 2 * d for d in range(D))
-            yy = r.max(axis=axes) if op == "max" else r.mean(axis=axes)
-            return yy
-        init = -jnp.inf if op == "max" else 0.0
-        red = jax.lax.max if op == "max" else jax.lax.add
-        window = (1, 1) + (k,) * D
-        strides = (1, 1) + (stride,) * D
-        yy = jax.lax.reduce_window(xx, jnp.asarray(init, xx.dtype), red,
-                                   window, strides, "VALID")
-        if op == "avg":
-            yy = yy / (k ** D)
-        return yy
+        return pool(xx, k=k, stride=stride, op=op, spatial_axes=spatial_axes)
 
-    return prim.smap(body, mesh, x_spec, x_spec)(x)
+    return dist_jit(body, Policy.for_mesh(mesh), part, part, jit=False)(x)
 
 
 # ---------------------------------------------------------------------------
@@ -254,14 +392,17 @@ def dist_pool(mesh, x, *, k: int, stride: int, op: str = "max",
 # (each token's row lives on exactly one worker, so the sum is exact).
 # ---------------------------------------------------------------------------
 
-def dist_embedding_fn(ids, table, *, vocab_axis: str, vocab_global: int):
-    """Body for a vocab-sharded embedding lookup; call inside shard_map.
+def embedding(ids, table, *, vocab_axis: str):
+    """Vocab-sharded embedding lookup on local shards.
 
     ids local (...,) int32; table local (vocab_loc, d).  Workers look up only
     ids in their own vocab range and contribute zeros otherwise; the
     sum-reduce over ``vocab_axis`` assembles the full embedding (paper's R).
     """
+    vocab_axis = _ax(vocab_axis)
     vloc = table.shape[0]
+    if vocab_axis is None:
+        return jnp.take(table, jnp.clip(ids, 0, vloc - 1), axis=0)
     idx = jax.lax.axis_index(vocab_axis)
     lo = idx * vloc
     local = ids - lo
@@ -269,14 +410,22 @@ def dist_embedding_fn(ids, table, *, vocab_axis: str, vocab_global: int):
     local = jnp.clip(local, 0, vloc - 1)
     emb = jnp.take(table, local, axis=0)
     emb = jnp.where(in_range[..., None], emb, jnp.zeros((), emb.dtype))
-    return prim.sum_reduce(emb, vocab_axis)
+    return linop.SumReduce(vocab_axis)(emb)
+
+
+def dist_embedding_fn(ids, table, *, vocab_axis: str):
+    """Deprecated alias of ``embedding`` (the seed's shard_map body name;
+    the dead ``vocab_global`` parameter is gone)."""
+    return embedding(ids, table, vocab_axis=vocab_axis)
 
 
 def dist_embedding(mesh, ids, table, *, vocab_axis="model", batch_axis="data"):
-    vocab_global = table.shape[0]
-    return prim.smap(
-        partial(dist_embedding_fn, vocab_axis=vocab_axis, vocab_global=vocab_global),
-        mesh,
-        (P(batch_axis), P(vocab_axis, None)),
-        P(batch_axis, None),
-    )(ids, table)
+    """Vocab-sharded embedding.  DEPRECATED legacy shim."""
+
+    def body(ii, tt):
+        return embedding(ii, tt, vocab_axis=vocab_axis)
+
+    return dist_jit(
+        body, Policy.for_mesh(mesh),
+        (Partitioned(batch_axis), Partitioned(vocab_axis, None)),
+        Partitioned(batch_axis, None), jit=False)(ids, table)

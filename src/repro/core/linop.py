@@ -1,0 +1,448 @@
+"""Operator algebra: composable, adjoint-aware linear operators (paper §2-3).
+
+The paper's central claim is that parallel data movement *is* linear
+algebra: broadcast, sum-reduce, halo exchange are linear operators whose
+adjoints compose by reversal, ``(A B)* = B* A*``.  ``primitives.py`` holds
+the raw SPMD kernels; this module reifies them as first-class objects so
+composition, adjoint pairing and mesh metadata live in ONE place instead of
+being re-derived at every call site.
+
+Each ``LinearOp``:
+
+- is callable on a local shard inside a ``shard_map`` body (``op(x)``),
+- carries its mesh-axis / tensor-dim / width metadata as frozen dataclass
+  fields (so ops compare equal structurally),
+- exposes its hand-derived adjoint as ``op.T`` — registered ONCE, here, per
+  operator class (paper §3's manual-adjoint table),
+- composes with ``@``: ``(A @ B)(x) == A(B(x))`` and the reversal law
+  ``(A @ B).T == B.T @ A.T`` holds by construction,
+- declares canonical boundary specs ``in_spec(rank)`` / ``out_spec(rank)``
+  describing how a GLOBAL array maps onto per-worker shards when the op is
+  lifted to a global operator F (the paper's "inclusive" memory view: the
+  global vector is the concatenation of the workers' local states).
+
+``check_adjoint`` is the generic Eq. 13 harness: for any op (or composite)
+it lifts F and F* to global operators via ``shard_map`` and verifies BOTH
+
+  (a)  <F x, y> == <x, op.T y>     — the registered adjoint is THE adjoint,
+  (b)  jax.vjp(F) agrees with Eq. 13 — AD through the primitives' custom
+       vjp rules is coherent with the forward (the paper's original test).
+
+Every concrete op and every composite built from them must pass it; see
+tests/md/test_linop.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import primitives as prim
+from .adjoint import AdjointReport, adjoint_test, inner, norm
+
+__all__ = [
+    "LinearOp",
+    "Identity",
+    "Broadcast",
+    "SumReduce",
+    "AllReduce",
+    "AllGather",
+    "ReduceScatter",
+    "AllToAll",
+    "SendRecv",
+    "HaloExchange",
+    "HaloAccumulate",
+    "Compose",
+    "check_adjoint",
+    "lift",
+]
+
+
+def _axis_at(axis, dim: int, rank: int) -> P:
+    """PartitionSpec with ``axis`` at position ``dim`` and None elsewhere."""
+    if dim >= rank:
+        raise ValueError(f"op acts on dim {dim} but rank is {rank}")
+    return P(*[axis if i == dim else None for i in range(rank)])
+
+
+@dataclass(frozen=True)
+class LinearOp:
+    """A linear operator on per-worker shards, with a registered adjoint.
+
+    Subclasses implement ``__call__`` (the SPMD-local forward, callable
+    inside a shard_map body) and ``_adjoint`` (the hand-derived adjoint,
+    returned by ``.T``).  All metadata lives in frozen dataclass fields, so
+    equality is structural — ``(A @ B).T == B.T @ A.T`` is an actual ``==``.
+    """
+
+    def __call__(self, x):
+        raise NotImplementedError
+
+    def _adjoint(self) -> "LinearOp":
+        raise NotImplementedError
+
+    @property
+    def T(self) -> "LinearOp":
+        """The paper's ``*`` adjoint."""
+        return self._adjoint()
+
+    def __matmul__(self, other: "LinearOp") -> "LinearOp":
+        a = self.ops if isinstance(self, Compose) else (self,)
+        b = other.ops if isinstance(other, Compose) else (other,)
+        return Compose(a + b)
+
+    # Canonical global-lift boundary specs (rank-parametric).
+    def in_spec(self, rank: int) -> P:
+        return P()
+
+    def out_spec(self, rank: int) -> P:
+        return P()
+
+
+@dataclass(frozen=True)
+class Compose(LinearOp):
+    """``Compose((A, B, C))(x) == A(B(C(x)))`` — matrix-product order."""
+
+    ops: Tuple[LinearOp, ...]
+
+    def __call__(self, x):
+        for op in reversed(self.ops):
+            x = op(x)
+        return x
+
+    def _adjoint(self) -> "LinearOp":
+        # (A B)* = B* A* — adjoints compose by reversal (paper §2).
+        return Compose(tuple(op.T for op in reversed(self.ops)))
+
+    def in_spec(self, rank: int) -> P:
+        return self.ops[-1].in_spec(rank)
+
+    def out_spec(self, rank: int) -> P:
+        return self.ops[0].out_spec(rank)
+
+
+@dataclass(frozen=True)
+class Identity(LinearOp):
+    """I — neutral element; self-adjoint."""
+
+    def __call__(self, x):
+        return x
+
+    def _adjoint(self):
+        return self
+
+    def in_spec(self, rank):
+        return P()
+
+    def out_spec(self, rank):
+        return P()
+
+
+@dataclass(frozen=True)
+class Broadcast(LinearOp):
+    """B_{1->k} over ``axis`` (paper Eq. 8): one copy in, k copies out.
+
+    SPMD forward is the identity on a replicated value; lifted globally
+    (in_spec replicated, out_spec stacked) it is F^m -> F^{km}.  Adjoint:
+    the Eq. 9 sum-reduction.
+    """
+
+    axis: str
+
+    def __call__(self, x):
+        return prim.broadcast(x, self.axis)
+
+    def _adjoint(self):
+        return SumReduce(self.axis)
+
+    def in_spec(self, rank):
+        return P()
+
+    def out_spec(self, rank):
+        return _axis_at(self.axis, 0, rank)
+
+
+@dataclass(frozen=True)
+class SumReduce(LinearOp):
+    """R_{k->1} over ``axis`` (paper §3): sums the k per-worker realizations;
+    the result is replicated.  R = B*, R* = B."""
+
+    axis: str
+
+    def __call__(self, x):
+        return prim.sum_reduce(x, self.axis)
+
+    def _adjoint(self):
+        return Broadcast(self.axis)
+
+    def in_spec(self, rank):
+        return _axis_at(self.axis, 0, rank)
+
+    def out_spec(self, rank):
+        return P()
+
+
+@dataclass(frozen=True)
+class AllReduce(LinearOp):
+    """A = B·R (paper §3); self-adjoint: A* = R*·B* = B·R = A."""
+
+    axis: str
+
+    def __call__(self, x):
+        return prim.all_reduce(x, self.axis)
+
+    def _adjoint(self):
+        return self
+
+    def in_spec(self, rank):
+        return _axis_at(self.axis, 0, rank)
+
+    def out_spec(self, rank):
+        return _axis_at(self.axis, 0, rank)
+
+
+@dataclass(frozen=True)
+class AllGather(LinearOp):
+    """Partitioned broadcast along tensor ``dim``; adjoint = ReduceScatter."""
+
+    axis: str
+    dim: int = 0
+
+    def __call__(self, x):
+        return prim.all_gather(x, self.axis, self.dim)
+
+    def _adjoint(self):
+        return ReduceScatter(self.axis, self.dim)
+
+    def in_spec(self, rank):
+        return _axis_at(self.axis, self.dim, rank)
+
+    def out_spec(self, rank):
+        return _axis_at(self.axis, self.dim, rank)
+
+
+@dataclass(frozen=True)
+class ReduceScatter(LinearOp):
+    """Partitioned sum-reduce along ``dim``; adjoint = AllGather."""
+
+    axis: str
+    dim: int = 0
+
+    def __call__(self, x):
+        return prim.reduce_scatter(x, self.axis, self.dim)
+
+    def _adjoint(self):
+        return AllGather(self.axis, self.dim)
+
+    def in_spec(self, rank):
+        return _axis_at(self.axis, self.dim, rank)
+
+    def out_spec(self, rank):
+        return _axis_at(self.axis, self.dim, rank)
+
+
+@dataclass(frozen=True)
+class AllToAll(LinearOp):
+    """Generalized all-to-all (paper §3): a block permutation; the adjoint
+    is the reverse block permutation (split/concat dims swapped)."""
+
+    axis: str
+    split_dim: int
+    concat_dim: int
+
+    def __call__(self, x):
+        return prim.all_to_all(x, self.axis, self.split_dim, self.concat_dim)
+
+    def _adjoint(self):
+        return AllToAll(self.axis, self.concat_dim, self.split_dim)
+
+    def in_spec(self, rank):
+        return _axis_at(self.axis, self.concat_dim, rank)
+
+    def out_spec(self, rank):
+        return _axis_at(self.axis, self.split_dim, rank)
+
+
+@dataclass(frozen=True)
+class SendRecv(LinearOp):
+    """Non-periodic ring shift by ``offset`` (paper §3 send/receive); the
+    adjoint is the reverse shift."""
+
+    axis: str
+    offset: int = 1
+
+    def __call__(self, x):
+        return prim.send_recv(x, self.axis, self.offset)
+
+    def _adjoint(self):
+        return SendRecv(self.axis, -self.offset)
+
+    def in_spec(self, rank):
+        return _axis_at(self.axis, 0, rank)
+
+    def out_spec(self, rank):
+        return _axis_at(self.axis, 0, rank)
+
+
+def _as_widths(w) -> Tuple[int, ...] | None:
+    if w is None:
+        return None
+    if isinstance(w, int):
+        raise TypeError("per-worker widths must be a sequence, got int")
+    return tuple(int(v) for v in w)
+
+
+@dataclass(frozen=True)
+class HaloExchange(LinearOp):
+    """H (paper Eq. 10-12, App. B): attach neighbour margins along ``dim``.
+
+    Balanced form: uniform ``left``/``right`` widths on every worker.
+    Unbalanced form (App. B): pass per-worker ``left_widths`` /
+    ``right_widths`` (from ``partition.compute_halos``); buffers are uniform
+    at the max width and a per-worker diagonal mask zeroes unused lanes —
+    masking is linear, so the composite stays adjoint-exact.
+
+    Adjoint: ``HaloAccumulate`` — margins travel back to the owning
+    neighbour and ADD into its bulk (the paper's key §3 observation).
+    """
+
+    axis: str
+    dim: int = 0
+    left: int = 0
+    right: int = 0
+    left_widths: Tuple[int, ...] | None = field(default=None)
+    right_widths: Tuple[int, ...] | None = field(default=None)
+
+    def __post_init__(self):
+        object.__setattr__(self, "left_widths", _as_widths(self.left_widths))
+        object.__setattr__(self, "right_widths", _as_widths(self.right_widths))
+        if (self.left_widths is None) != (self.right_widths is None):
+            raise ValueError("pass both left_widths and right_widths or neither")
+        if self.left_widths is not None:
+            object.__setattr__(self, "left", int(max(self.left_widths)))
+            object.__setattr__(self, "right", int(max(self.right_widths)))
+
+    @property
+    def unbalanced(self) -> bool:
+        return self.left_widths is not None
+
+    def __call__(self, x):
+        if self.unbalanced:
+            return prim.halo_exchange_unbalanced(
+                x, self.axis, self.dim, self.left_widths, self.right_widths)
+        return prim.halo_exchange(x, self.axis, self.dim, self.left, self.right)
+
+    def _adjoint(self):
+        return HaloAccumulate(self.axis, self.dim, self.left, self.right,
+                              self.left_widths, self.right_widths)
+
+    def in_spec(self, rank):
+        return _axis_at(self.axis, self.dim, rank)
+
+    def out_spec(self, rank):
+        return _axis_at(self.axis, self.dim, rank)
+
+
+@dataclass(frozen=True)
+class HaloAccumulate(LinearOp):
+    """H* (paper Eq. 12): margins return to their owner and add into the
+    bulk.  For the unbalanced form the diagonal mask is self-adjoint, so
+    H_unbal* = H* ∘ mask."""
+
+    axis: str
+    dim: int = 0
+    left: int = 0
+    right: int = 0
+    left_widths: Tuple[int, ...] | None = field(default=None)
+    right_widths: Tuple[int, ...] | None = field(default=None)
+
+    def __post_init__(self):
+        # Mirror HaloExchange: buffer widths are the per-worker maxima, so a
+        # directly constructed unbalanced accumulate behaves identically to
+        # HaloExchange(widths).T and .T is an involution.
+        object.__setattr__(self, "left_widths", _as_widths(self.left_widths))
+        object.__setattr__(self, "right_widths", _as_widths(self.right_widths))
+        if (self.left_widths is None) != (self.right_widths is None):
+            raise ValueError("pass both left_widths and right_widths or neither")
+        if self.left_widths is not None:
+            object.__setattr__(self, "left", int(max(self.left_widths)))
+            object.__setattr__(self, "right", int(max(self.right_widths)))
+
+    def __call__(self, y):
+        if self.left_widths is not None:
+            y = _unbalanced_mask(y, self.axis, self.dim, self.left, self.right,
+                                 self.left_widths, self.right_widths)
+        return prim.halo_accumulate(y, self.axis, self.dim, self.left, self.right)
+
+    def _adjoint(self):
+        return HaloExchange(self.axis, self.dim, self.left, self.right,
+                            self.left_widths, self.right_widths)
+
+    def in_spec(self, rank):
+        return _axis_at(self.axis, self.dim, rank)
+
+    def out_spec(self, rank):
+        return _axis_at(self.axis, self.dim, rank)
+
+
+def _unbalanced_mask(y, axis, dim, lmax, rmax, left_widths, right_widths):
+    """The diagonal operator D of the unbalanced halo (paper App. B): keep
+    worker i's [lmax - lw_i, lmax + bulk + rw_i) lanes, zero the rest."""
+    idx = jax.lax.axis_index(axis)
+    shape = [1] * y.ndim
+    shape[dim] = y.shape[dim]
+    pos = jax.lax.broadcasted_iota(jnp.int32, tuple(shape), dim)
+    lw = jnp.asarray(list(left_widths), jnp.int32)[idx]
+    rw = jnp.asarray(list(right_widths), jnp.int32)[idx]
+    bulk = y.shape[dim] - lmax - rmax
+    mask = (pos >= lmax - lw) & (pos < lmax + bulk + rw)
+    return jnp.where(mask, y, jnp.zeros((), y.dtype))
+
+
+# ---------------------------------------------------------------------------
+# The generic Eq. 13 harness.
+# ---------------------------------------------------------------------------
+
+def lift(op: LinearOp, mesh, rank: int):
+    """Lift an op to a global operator F via shard_map over its canonical
+    boundary specs (the paper's inclusive-memory global view)."""
+    return prim.smap(op, mesh, op.in_spec(rank), op.out_spec(rank))
+
+
+def check_adjoint(op: LinearOp, mesh, shape, *, key=None, eps: float = 1e-4,
+                  name: str | None = None) -> AdjointReport:
+    """Paper Eq. 13 for ``op`` AND its registered adjoint ``op.T``.
+
+    ``shape`` is the GLOBAL input shape under ``op.in_spec`` (sharded dims
+    must divide by the mesh axis size).  Verifies both that ``op.T`` is the
+    adjoint of ``op`` under the Euclidean inner product, and that AD
+    (jax.vjp) through the forward agrees — the returned report carries the
+    max of the two relative errors.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if name is None:
+        name = repr(op)
+    rank = len(shape)
+    F = lift(op, mesh, rank)
+    Fstar = lift(op.T, mesh, rank)
+
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, shape, jnp.float32)
+    fx = F(x)
+    y = jax.random.normal(ky, fx.shape, jnp.float32)
+    fstar_y = Fstar(y)
+
+    lhs = inner(fx, y)
+    rhs = inner(x, fstar_y)
+    denom = jnp.maximum(norm(fx) * norm(y), norm(x) * norm(fstar_y))
+    denom = jnp.maximum(denom, jnp.asarray(1e-30, denom.dtype))
+    rel_pair = float(np.asarray(jax.device_get(jnp.abs(lhs - rhs) / denom)))
+
+    rel_vjp = adjoint_test(F, x, y, name=name, eps=eps).rel_err
+    return AdjointReport(name, max(rel_pair, rel_vjp), eps)

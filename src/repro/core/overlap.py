@@ -20,6 +20,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 __all__ = ["ring_allgather_matmul", "ring_matmul_reducescatter"]
 
 
@@ -35,7 +37,7 @@ def ring_allgather_matmul(x: jax.Array, w: jax.Array, axis_name) -> jax.Array:
     (f_tot, n_out_loc) — all rows, the worker's output-column shard.
     Returns (..., n_out_loc), identical to the unfused gather-then-matmul.
     """
-    size = jax.lax.axis_size(axis_name)
+    size = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     f_loc = x.shape[-1]
     assert w.shape[0] == f_loc * size, (w.shape, f_loc, size)
@@ -62,7 +64,7 @@ def ring_matmul_reducescatter(x: jax.Array, w: jax.Array, axis_name) -> jax.Arra
     the worker's row shard, all output columns.  Returns
     (..., n_out_tot / size): worker j holds sum_i x_i @ w_i[:, block_j].
     """
-    size = jax.lax.axis_size(axis_name)
+    size = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     n_tot = w.shape[-1]
     assert n_tot % size == 0

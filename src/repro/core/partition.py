@@ -22,7 +22,7 @@ feed static paddings/slices into the JAX primitives.
 
 from __future__ import annotations
 
-import math
+
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -34,6 +34,8 @@ __all__ = [
     "conv_output_size",
     "HaloSpec",
     "compute_halos",
+    "is_sensible_decomposition",
+    "max_halo_widths",
     "TensorPartition",
 ]
 

@@ -29,7 +29,8 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 __all__ = [
     "smap",
@@ -41,6 +42,7 @@ __all__ = [
     "all_to_all",
     "send_recv",
     "halo_exchange",
+    "halo_accumulate",
     "halo_exchange_unbalanced",
     "axis_size",
 ]
@@ -50,12 +52,11 @@ def smap(f, mesh, in_specs, out_specs):
     """shard_map wrapper used throughout: vma checking is disabled because
     our custom_vjp rules intentionally produce replication patterns the
     checker cannot infer (the whole point of manual adjoints)."""
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_vma=False)
+    return compat.shard_map(f, mesh, in_specs, out_specs)
 
 
 def axis_size(axis_name) -> int:
-    return jax.lax.axis_size(axis_name)
+    return compat.axis_size(axis_name)
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +217,7 @@ def send_recv(x: jax.Array, axis_name, offset: int) -> jax.Array:
     """Copy each worker's realization to the worker ``offset`` positions away
     (non-periodic); workers with no source receive zeros (fresh allocation,
     paper §2)."""
-    size = jax.lax.axis_size(axis_name)
+    size = compat.axis_size(axis_name)
     return jax.lax.ppermute(x, axis_name, _shift_perm(size, offset))
 
 
@@ -225,7 +226,7 @@ def _send_recv_fwd(x, axis_name, offset):
 
 
 def _send_recv_bwd(axis_name, offset, _, g):
-    size = jax.lax.axis_size(axis_name)
+    size = compat.axis_size(axis_name)
     return (jax.lax.ppermute(g, axis_name, _shift_perm(size, -offset)),)
 
 
@@ -258,7 +259,7 @@ def _slice_dim(x, dim, lo, hi):
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
 def halo_exchange(x: jax.Array, axis_name, dim: int, left: int, right: int) -> jax.Array:
     """H: bulk-only local tensor -> [left margin | bulk | right margin]."""
-    size = jax.lax.axis_size(axis_name)
+    size = compat.axis_size(axis_name)
     parts = []
     if left > 0:
         # left margin <- left neighbour's last `left` entries (copy to right).
@@ -275,30 +276,57 @@ def halo_exchange(x: jax.Array, axis_name, dim: int, left: int, right: int) -> j
 
 
 def _halo_fwd(x, axis_name, dim, left, right):
-    return halo_exchange(x, axis_name, dim, left, right), x.shape[dim]
+    return halo_exchange(x, axis_name, dim, left, right), None
 
 
-def _halo_bwd(axis_name, dim, left, right, bulk, g):
-    size = jax.lax.axis_size(axis_name)
-    x_bar = _slice_dim(g, dim, left, left + bulk)
+def _halo_bwd(axis_name, dim, left, right, _, g):
+    # H* is a first-class primitive below: margins travel back to the
+    # neighbour that owns the data and ADD into its bulk (Eq. 12).
+    return (halo_accumulate(g, axis_name, dim, left, right),)
+
+
+halo_exchange.defvjp(_halo_fwd, _halo_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def halo_accumulate(y: jax.Array, axis_name, dim: int, left: int, right: int) -> jax.Array:
+    """H* (paper Eq. 12) as a first-class forward operator.
+
+    Takes a margin-augmented local tensor [left margin | bulk | right margin]
+    and returns the bulk with each margin sent back to the neighbour that
+    owns the data and ADDED into its bulk — the adjoint of ``halo_exchange``
+    with the same widths.  Registered as an explicit primitive so the
+    operator algebra (core/linop.py) can expose ``HaloExchange(...).T`` as a
+    callable op; its own custom_vjp closes the pair (H** = H).
+    """
+    size = compat.axis_size(axis_name)
+    bulk = y.shape[dim] - left - right
+    x_bar = _slice_dim(y, dim, left, left + bulk)
     if left > 0:
-        # Our left margin is a copy of the LEFT neighbour's trailing bulk:
-        # its cotangent returns there (send left) and ADDS into the bulk.
-        lm_bar = jax.lax.ppermute(_slice_dim(g, dim, 0, left),
+        lm_bar = jax.lax.ppermute(_slice_dim(y, dim, 0, left),
                                   axis_name, _shift_perm(size, -1))
         idx = [slice(None)] * x_bar.ndim
         idx[dim] = slice(bulk - left, bulk)
         x_bar = x_bar.at[tuple(idx)].add(lm_bar)
     if right > 0:
-        rm_bar = jax.lax.ppermute(_slice_dim(g, dim, left + bulk, left + bulk + right),
+        rm_bar = jax.lax.ppermute(_slice_dim(y, dim, left + bulk, left + bulk + right),
                                   axis_name, _shift_perm(size, +1))
         idx = [slice(None)] * x_bar.ndim
         idx[dim] = slice(0, right)
         x_bar = x_bar.at[tuple(idx)].add(rm_bar)
-    return (x_bar,)
+    return x_bar
 
 
-halo_exchange.defvjp(_halo_fwd, _halo_bwd)
+def _halo_acc_fwd(y, axis_name, dim, left, right):
+    return halo_accumulate(y, axis_name, dim, left, right), None
+
+
+def _halo_acc_bwd(axis_name, dim, left, right, _, g):
+    # (H*)* = H: margins of the cotangent are re-fetched from neighbours.
+    return (halo_exchange(g, axis_name, dim, left, right),)
+
+
+halo_accumulate.defvjp(_halo_acc_fwd, _halo_acc_bwd)
 
 
 def halo_exchange_unbalanced(

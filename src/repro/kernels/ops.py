@@ -17,7 +17,6 @@ import os
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_fwd

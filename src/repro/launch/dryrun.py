@@ -31,7 +31,7 @@ from repro.models import forward
 from repro.optim.optimizers import make_optimizer
 from repro.roofline.analysis import analyze, collective_bytes
 from repro.sharding import Policy
-from repro.train.step import build_train_step, init_train_state
+from repro.train.step import build_train_step
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")

@@ -15,7 +15,6 @@ import argparse
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.data import DataConfig, PrefetchIterator, SyntheticLM

@@ -128,6 +128,33 @@ def decode_attention(q, k_cache, v_cache, cache_len):
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def attention_block_tp(p, h, cfg, policy, *, positions):
+    """Explicit-TP attention sub-layer on LOCAL shards (inside dist_jit).
+
+    h: (B_loc, S, d_model/tp) — the residual stream is FEATURE-sharded over
+    the model axis, so the qkv projections are gather-affines (paper's
+    partitioned broadcast B fused with the GEMM as a ring collective-matmul
+    when policy.explicit_tp) and the output projection is a scatter-affine
+    (GEMM fused with the adjoint reduce-scatter R).  Heads stay sharded in
+    between; attention itself is head-local.  Train/prefill math only (no
+    cache plumbing here).
+    """
+    from repro.core import layers as L
+
+    ax = policy.model_axis
+    tp = policy.model_size
+    hd = cfg.resolved_head_dim
+    q = _split_heads(L.affine_gather(h, p["wq"], axis=ax), cfg.num_heads // tp, hd)
+    k = _split_heads(L.affine_gather(h, p["wk"], axis=ax), cfg.num_kv_heads // tp, hd)
+    v = _split_heads(L.affine_gather(h, p["wv"], axis=ax), cfg.num_kv_heads // tp, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = blockwise_attention(q, k, v, chunk=cfg.attn_chunk,
+                              unroll=cfg.unroll_scans)
+    out = out.reshape(out.shape[0], out.shape[1], (cfg.num_heads // tp) * hd)
+    return L.affine_scatter(out, p["wo"], axis=ax)
+
+
 def attention_block(p, x, cfg, policy, *, positions, mode, cache=None,
                     cache_len=None, use_flash: bool = False):
     """Full attention sub-layer: qkv proj -> rope -> attend -> out proj.

@@ -11,8 +11,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .attention import attention_block, attn_init
-from .common import mlp_apply, mlp_init, rmsnorm
+from repro.core import layers as L
+from repro.core.compile import dist_jit
+from repro.sharding import Partitioned
+
+from .attention import attention_block, attention_block_tp, attn_init
+from .common import mlp_apply, mlp_init, rmsnorm, rmsnorm_sharded
 from .moe import moe_apply, moe_init
 from .ssm import ssm_block, ssm_init
 
@@ -38,6 +42,68 @@ def sublayer_init(key, cfg, layer: int, dtype) -> dict:
     return p
 
 
+def _tp_fusable(cfg, policy, mixer, ffn, mode, use_flash) -> bool:
+    """The explicit-TP fused path covers the attention+MLP sublayer in
+    training; everything else (SSM, MoE, prefill/decode caching, the Pallas
+    flash kernel) keeps the GSPMD path."""
+    if policy is None or not getattr(policy, "explicit_tp", False):
+        return False
+    if use_flash:
+        # the fused body uses blockwise XLA attention; don't silently drop a
+        # requested flash kernel
+        return False
+    if mode != "train" or mixer != "attn" or ffn not in ("mlp", "none"):
+        return False
+    tp = policy.model_size
+    return (cfg.d_model % tp == 0 and cfg.num_heads % tp == 0
+            and cfg.num_kv_heads % tp == 0 and cfg.d_ff % tp == 0)
+
+
+def _tp_sublayer_body(p, x, positions, cfg, policy, ffn):
+    """Whole sublayer on local shards: ONE shard_map spans both the
+    attention and FFN halves, so their four ring collective-matmuls
+    (qkv-gather, out-scatter, up-gather, down-scatter) can overlap compute
+    across sub-layer boundaries.  x: (B_loc, S, d_model/tp)."""
+    ax = policy.model_axis
+    h = rmsnorm_sharded(x, p["norm_mixer"], ax)
+    x = x + attention_block_tp(p["attn"], h, cfg, policy, positions=positions)
+    if ffn == "mlp":
+        h = rmsnorm_sharded(x, p["norm_ffn"], ax)
+        mp = p["mlp"]
+        up = L.affine_gather(h, mp["w_up"], axis=ax)
+        if cfg.mlp_type == "swiglu":
+            up = jax.nn.silu(L.affine_gather(h, mp["w_gate"], axis=ax)) * up
+        else:
+            up = jax.nn.gelu(up)
+        x = x + L.affine_scatter(up, mp["w_down"], axis=ax)
+    return x
+
+
+def _tp_sublayer_apply(p, x, cfg, policy, *, positions, ffn):
+    """dist_jit wrapper of the fused sublayer: logical Partitioned specs at
+    the boundary (residual features over the model axis — the repartition
+    from/to the sequence-sharded stream is inserted by GSPMD outside)."""
+    m = Partitioned("model")
+    col = Partitioned(None, "model")   # (in, out-shard) projections
+    row = Partitioned("model", None)   # (in-shard, out) projections
+    p_parts = {"norm_mixer": m,
+               "attn": {"wq": col, "wk": col, "wv": col, "wo": row}}
+    p_in = {"norm_mixer": p["norm_mixer"], "attn": p["attn"]}
+    if ffn == "mlp":
+        p_parts["norm_ffn"] = m
+        p_parts["mlp"] = {k: (row if k == "w_down" else col) for k in p["mlp"]}
+        p_in["norm_ffn"] = p["norm_ffn"]
+        p_in["mlp"] = p["mlp"]
+    xp = Partitioned("batch", None, "model")
+
+    def body(pp, xx, pos):
+        return _tp_sublayer_body(pp, xx, pos, cfg, policy, ffn)
+
+    return dist_jit(body, policy,
+                    (p_parts, xp, Partitioned("batch", None)), xp,
+                    jit=False)(p_in, x, positions)
+
+
 def sublayer_apply(p, x, cfg, policy, layer: int, *, positions, mode,
                    cache=None, cache_len=None, use_flash=False):
     """One decoder layer: x + mixer(norm(x)); x + ffn(norm(x)).
@@ -45,6 +111,12 @@ def sublayer_apply(p, x, cfg, policy, layer: int, *, positions, mode,
     Returns (x, new_cache, aux_loss)."""
     mixer, ffn = layer_kinds(cfg, layer)
     aux = jnp.zeros((), jnp.float32)
+
+    if _tp_fusable(cfg, policy, mixer, ffn, mode, use_flash):
+        x = _tp_sublayer_apply(p, x, cfg, policy, positions=positions,
+                               ffn=ffn)
+        x = policy.constrain(x, "batch", "seq", None)
+        return x, None, aux
 
     h = rmsnorm(x, p["norm_mixer"])
     if mixer == "attn":

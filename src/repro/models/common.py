@@ -6,12 +6,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import primitives as prim
+
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
     """RMSNorm computed in fp32 (point-wise: embarrassingly parallel)."""
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_sharded(x: jax.Array, w: jax.Array, axis, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with the FEATURE dim sharded over ``axis`` (explicit-TP
+    residual layout): the mean of squares is assembled with the paper's
+    sum-reduce R; w is the matching local shard.  Call inside shard_map."""
+    xf = x.astype(jnp.float32)
+    d = x.shape[-1] * prim.axis_size(axis)
+    ss = prim.sum_reduce(jnp.sum(xf * xf, axis=-1, keepdims=True), axis)
+    out = xf * jax.lax.rsqrt(ss / d + eps)
     return (out * w.astype(jnp.float32)).astype(x.dtype)
 
 

@@ -17,16 +17,15 @@ equivalence on a synthetic MNIST-like task.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.core import layers as L
-from repro.core import primitives as prim
+from repro.core import linop
+from repro.core.compile import dist_jit
 from repro.models.common import dense_init
+from repro.sharding import Partitioned, Policy
 
 
 def lenet_init(key):
@@ -71,50 +70,70 @@ def lenet_apply_sequential(params, x):
     return f @ params["fc3"]["w"].T + params["fc3"]["b"]
 
 
-def lenet_apply_distributed(mesh, params, x, *, h_axis="fo", w_axis="fi"):
-    """Distributed forward on a 2x2 mesh (h_axis, w_axis).
-
-    Conv stage: image height sharded over ``h_axis`` -> dist_conv_same's
-    halo exchange (paper §4 sparse layers).  Affine stage: P_fo x P_fi =
-    (h_axis, w_axis) (paper §4 dense layers).  The flatten between them is
-    the paper's transpose glue.
+def _lenet_body(params, x, *, h_axis, w_axis):
+    """The whole distributed forward on LOCAL shards — ONE shard_map region
+    (dist_jit), so the halo exchanges, the transpose glue and the affine
+    sum-reduces can all be scheduled against neighbouring compute.
     """
-    # --- sparse stage: H sharded ---
-    h = L.dist_conv_same(mesh, x, params["conv1"]["w"], params["conv1"]["b"],
-                         spatial_axes=(h_axis, None))
+    # --- sparse stage: H sharded over h_axis ---
+    h = L.conv_same(x, params["conv1"]["w"], params["conv1"]["b"],
+                    spatial_axes=(h_axis, None))
     h = jax.nn.relu(h)                                   # point-wise: native
-    h = L.dist_pool(mesh, h, k=2, stride=2, op="max",
-                    spatial_axes=(h_axis, None))         # 14x14, 7 local
-    h2 = L.dist_conv_same(mesh, h, params["conv2"]["w"], params["conv2"]["b"],
-                          spatial_axes=(h_axis, None))
+    h = L.pool(h, k=2, stride=2, op="max",
+               spatial_axes=(h_axis, None))              # 14x14, 7 local
+    h2 = L.conv_same(h, params["conv2"]["w"], params["conv2"]["b"],
+                     spatial_axes=(h_axis, None))
 
     # crop SAME->VALID: per-worker offsets (2,0) on the sharded H dim — the
     # unbalanced-trim case of App. B (left_unused=2 on worker 0 only).
-    def crop_body(t):
-        idx = jax.lax.axis_index(h_axis)
-        start = jnp.where(idx == 0, 2, 0)
-        t = jax.lax.dynamic_slice_in_dim(t, start, 5, axis=2)
-        return t[:, :, :, 2:12]
-    h2 = prim.smap(crop_body, mesh, P(None, None, h_axis, None),
-                   P(None, None, h_axis, None))(h2)
+    idx = jax.lax.axis_index(h_axis)
+    start = jnp.where(idx == 0, 2, 0)
+    h2 = jax.lax.dynamic_slice_in_dim(h2, start, 5, axis=2)[:, :, :, 2:12]
     h2 = jax.nn.relu(h2)
 
     # --- transpose glue (paper Fig. C10): gather spatial, go feature-parallel
-    h2 = prim.smap(lambda t: prim.all_gather(t, h_axis, 2), mesh,
-                   P(None, None, h_axis, None), P(None, None, None, None))(h2)
+    h2 = linop.AllGather(h_axis, 2)(h2)
     h2 = jax.lax.reduce_window(h2, -jnp.inf, jax.lax.max, (1, 1, 2, 2),
                                (1, 1, 2, 2), "VALID")    # 5x5
     f = h2.reshape(h2.shape[0], -1)                      # (B, 400)
 
     # --- dense stage: P_fo x P_fi = 2x2, Table 1 local shapes ---
-    f = jax.nn.relu(L.dist_affine(mesh, f, params["fc1"]["w"],
-                                  params["fc1"]["b"], fo_axis=h_axis,
-                                  fi_axis=w_axis))       # local w: (60, 200)
-    f = jax.nn.relu(L.dist_affine(mesh, f, params["fc2"]["w"],
-                                  params["fc2"]["b"], fo_axis=h_axis,
-                                  fi_axis=w_axis))       # local w: (42, 60)
-    return L.dist_affine(mesh, f, params["fc3"]["w"], params["fc3"]["b"],
-                         fo_axis=h_axis, fi_axis=w_axis)  # local w: (5, 42)
+    # restriction to this worker's fi block = the paper's transpose glue
+    # (adjoint: zero-pad, by AD); then the affine B -> GEMM -> R chain.
+    def fc(f, layer):
+        f = L.shard_slice(f, w_axis, -1)
+        return L.affine(f, params[layer]["w"], params[layer]["b"],
+                        fo_axis=h_axis, fi_axis=w_axis)
+
+    f = jax.nn.relu(fc(f, "fc1"))                        # local w: (60, 200)
+    f = linop.AllGather(h_axis, f.ndim - 1)(f)           # fo -> fi repartition
+    f = jax.nn.relu(fc(f, "fc2"))                        # local w: (42, 60)
+    f = linop.AllGather(h_axis, f.ndim - 1)(f)
+    return fc(f, "fc3")                                  # local w: (5, 42)
+
+
+def lenet_apply_distributed(mesh, params, x, *, h_axis="fo", w_axis="fi"):
+    """Distributed forward on a 2x2 mesh (h_axis, w_axis).
+
+    Conv stage: image height sharded over ``h_axis`` -> conv_same's halo
+    exchange (paper §4 sparse layers).  Affine stage: P_fo x P_fi =
+    (h_axis, w_axis) (paper §4 dense layers).  The flatten between them is
+    the paper's transpose glue.  The entire network is ONE dist_jit region.
+    """
+    w_parts = {"w": Partitioned(h_axis, w_axis), "b": Partitioned(h_axis)}
+    p_parts = {
+        "conv1": {"w": None, "b": None},
+        "conv2": {"w": None, "b": None},
+        "fc1": w_parts, "fc2": w_parts, "fc3": w_parts,
+    }
+
+    def body(pp, xx):
+        return _lenet_body(pp, xx, h_axis=h_axis, w_axis=w_axis)
+
+    return dist_jit(
+        body, Policy.for_mesh(mesh),
+        (p_parts, Partitioned(None, None, h_axis, None)),
+        Partitioned(None, h_axis), jit=False)(params, x)
 
 
 def table1_local_shapes(mesh_shape=(2, 2)):

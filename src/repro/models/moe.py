@@ -27,7 +27,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import primitives as prim
+from repro.core.compile import dist_jit
 from .common import dense_init, mlp_apply, mlp_init
 
 
@@ -91,7 +93,7 @@ def moe_block_fn(x, p, cfg, *, ep_axis, fsdp_axes, fsdp: bool, all_axes):
     """shard_map body.  x: (B_loc, S_loc, d)."""
     Bl, Sl, d = x.shape
     xt = x.reshape(Bl * Sl, d)
-    ep = jax.lax.axis_size(ep_axis)
+    ep = compat.axis_size(ep_axis)
     assert cfg.num_experts % ep == 0, (cfg.num_experts, ep)
 
     def expert_fn(disp):  # (E, C, d) local slots for ALL experts
@@ -172,7 +174,10 @@ def moe_apply(x, p, cfg, policy):
     body = partial(moe_block_fn, cfg=cfg, ep_axis=ep_axis,
                    fsdp_axes=fsdp_axes, fsdp=fsdp,
                    all_axes=tuple(mesh.axis_names))
-    y, aux = prim.smap(body, mesh, (x_spec, w_specs), (x_spec, P()))(x, p_in)
+    # The whole MoE sub-layer (dispatch all-to-all, expert GEMMs, combine)
+    # is ONE dist_jit region; param specs come from the policy's rules.
+    y, aux = dist_jit(body, policy, (x_spec, w_specs), (x_spec, P()),
+                      jit=False)(x, p_in)
     if cfg.num_shared_experts:
         # shared expert: plain dense FFN under GSPMD (TP over ff).
         y = y + mlp_apply(x, p["shared"], "swiglu")

@@ -16,7 +16,6 @@ fitting a 1T model on a pod (EXPERIMENTS.md memory table):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable
 
 import jax

@@ -21,7 +21,7 @@ Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

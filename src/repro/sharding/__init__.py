@@ -1,1 +1,2 @@
 from .policy import Policy  # noqa: F401
+from .spec import Partitioned, Replicated  # noqa: F401

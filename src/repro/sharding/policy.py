@@ -20,7 +20,8 @@ degenerates gracefully, so the same model code runs CPU smoke tests.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import dataclasses
+from dataclasses import dataclass
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -36,12 +37,59 @@ class Policy:
     fsdp_over_pod: bool = False          # also shard params over pod axis
     seq_shard: bool = True               # SP: residuals sharded over model
     explicit_tp: bool = False            # route TP matmuls through shard_map
+                                         # (ring collective-matmul overlap)
     explicit_moe: bool = True            # MoE via shard_map all_to_all (EP)
     kv_layout: str = "kvdim"             # decode cache: "kvdim" shards
                                          # head_dim; "kvseq" shards sequence
                                          # (flash-decoding combine)
+    aliases: tuple = ()                  # extra logical-axis bindings,
+                                         # ((name, target), ...) — see bind()
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, **kw) -> "Policy":
+        """A minimal policy over an arbitrary mesh (tests, legacy layer
+        shims): logical names resolve only through mesh axis names and
+        explicit ``bind`` aliases."""
+        names = tuple(mesh.axis_names)
+        kw.setdefault("data_axis", names[0])
+        kw.setdefault("model_axis", names[-1])
+        kw.setdefault("fsdp", False)
+        kw.setdefault("seq_shard", False)
+        return cls(mesh, **kw)
+
+    def bind(self, **aliases) -> "Policy":
+        """Derived policy with extra logical-axis aliases.
+
+        ``policy.bind(fi="model", fo="data")`` makes ``Partitioned("fi")``
+        resolve through the alias.  Values may be mesh axis names, other
+        logical names, or None (force replication)."""
+        merged = dict(self.aliases)
+        merged.update(aliases)
+        return dataclasses.replace(self, aliases=tuple(sorted(merged.items())))
 
     # ---- logical -> physical -------------------------------------------------
+    def resolve_axis(self, name):
+        """Resolve one ``Partitioned`` entry to mesh axes (or None).
+
+        Mesh axis names pass through verbatim; tuples resolve element-wise;
+        anything else goes through the alias table and ``phys``."""
+        if name is None or name == "none":
+            return None
+        if isinstance(name, (tuple, list)):
+            out = []
+            for a in name:
+                r = self.resolve_axis(a)
+                if r is None:
+                    continue
+                out.extend(r) if isinstance(r, tuple) else out.append(r)
+            return tuple(out) if out else None
+        if name in self.mesh.axis_names:
+            return name
+        for alias, target in self.aliases:
+            if name == alias:
+                return self.resolve_axis(target)
+        return self.phys(name)
+
     def phys(self, logical: str | None):
         if logical is None or logical == "none":
             return None

@@ -1,0 +1,53 @@
+"""Logical partition declarations.
+
+``Partitioned("batch", "fi")`` names the LOGICAL axis of each tensor
+dimension; ``Policy.resolve_axis`` maps each name to a physical mesh axis
+(or None).  Layers and ``dist_jit`` callers declare partitions once in
+logical terms instead of hand-building ``PartitionSpec`` against a concrete
+mesh at every call site.
+
+Resolution rules per entry (see ``Policy.resolve_axis``):
+
+  None / "none"      -> replicated dimension
+  a mesh axis name   -> that axis, verbatim (lets mesh-generic code — tests
+                        on ("fo","fi") or ("h","w") meshes — skip the
+                        logical table)
+  a logical name     -> ``Policy.phys`` (batch, seq, heads, ff, experts,
+                        vocab, fsdp, kvdim, model, ...), extended by
+                        ``Policy.bind(...)`` aliases
+  a tuple of entries -> resolved element-wise (multi-axis sharding)
+"""
+
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["Partitioned", "Replicated"]
+
+
+class Partitioned:
+    """A per-dimension logical partition declaration (immutable)."""
+
+    __slots__ = ("axes",)
+
+    def __init__(self, *axes):
+        object.__setattr__(self, "axes", tuple(axes))
+
+    def __setattr__(self, name, value):
+        raise AttributeError("Partitioned is immutable")
+
+    def __eq__(self, other):
+        return isinstance(other, Partitioned) and self.axes == other.axes
+
+    def __hash__(self):
+        return hash(("Partitioned", self.axes))
+
+    def __repr__(self):
+        return f"Partitioned({', '.join(map(repr, self.axes))})"
+
+    def resolve(self, policy) -> P:
+        """PartitionSpec for ``policy``'s mesh (trailing dims replicated)."""
+        return P(*(policy.resolve_axis(a) for a in self.axes))
+
+
+Replicated = Partitioned()

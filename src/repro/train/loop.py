@@ -16,10 +16,9 @@ serialize, and slow-step counts are surfaced in metrics for the operator.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
-import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_lib
 

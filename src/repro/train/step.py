@@ -15,13 +15,12 @@ function ready for jit with in/out shardings:
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import forward
-from repro.optim.optimizers import clip_by_global_norm, global_norm
+from repro.optim.optimizers import global_norm
 
 
 def cross_entropy(logits, labels, z_loss: float = 1e-4):

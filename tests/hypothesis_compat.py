@@ -1,0 +1,73 @@
+"""Use real hypothesis when installed; otherwise a minimal deterministic
+fallback so the property tests still execute (with fixed pseudo-random
+examples) instead of failing collection.
+
+Only the subset the suite uses is implemented: ``st.integers``, ``st.data``
+(with ``data.draw``), ``@given`` over keyword strategies, and ``@settings``.
+"""
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+except ModuleNotFoundError:
+
+    import random
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _Data:
+        """Marker strategy: materialized per-example as a _DataObject."""
+
+        def sample(self, rng):
+            return _DataObject(rng)
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.sample(self._rng)
+
+    class strategies:  # noqa: N801 - mimics `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def data():
+            return _Data()
+
+    _DEFAULT_EXAMPLES = 25
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            # No functools.wraps: copying __wrapped__ would make pytest see
+            # the original signature and treat the parameters as fixtures.
+            def wrapper():
+                # @settings may sit above @given (set on this wrapper) or
+                # below it (set on the inner fn) — honor either order.
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+                rng = random.Random(0)
+                for _ in range(n):
+                    kwargs = {k: s.sample(rng) for k, s in strats.items()}
+                    fn(**kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._hypothesis_fallback = True
+            return wrapper
+
+        return deco

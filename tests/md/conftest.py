@@ -10,19 +10,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 import jax  # noqa: E402
 import pytest  # noqa: E402
+from repro import compat  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def mesh8():
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 host devices")
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 4), ("data", "model"))
 
 
 @pytest.fixture(scope="session")
 def mesh1d():
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 host devices")
-    return jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((8,), ("model",))

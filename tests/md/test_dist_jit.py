@@ -1,0 +1,141 @@
+"""dist_jit + Partitioned layer API on 8 real devices.
+
+Covers the PR's acceptance bar: dist_affine routed through dist_jit with
+``explicit_tp=True`` (ring collective-matmul forms) matches the unfused
+reference to fp32 tolerance in forward AND gradient, and the fused
+explicit-TP transformer sublayer (ONE shard_map over attention + FFN)
+matches the GSPMD reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layers as L
+from repro.core.compile import dist_jit
+from repro.sharding import Partitioned, Policy
+
+
+def _r(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestDistAffineThroughDistJit:
+    def _f(self, mesh1d, explicit_tp):
+        pol = Policy.for_mesh(mesh1d, explicit_tp=explicit_tp)
+        return dist_jit(
+            lambda x, w: L.affine(x, w, None, fo_axis=None, fi_axis="model"),
+            pol, (Partitioned(None, "model"), Partitioned(None, "model")),
+            Partitioned(None, None))
+
+    def test_explicit_tp_matches_unfused_and_dense(self, mesh1d):
+        x, w = _r((6, 16), 0), _r((8, 16), 1)
+        y_ring = self._f(mesh1d, True)(x, w)
+        y_unf = self._f(mesh1d, False)(x, w)
+        ref = x @ w.T
+        np.testing.assert_allclose(y_ring, y_unf, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(y_ring, ref, rtol=2e-5, atol=2e-5)
+
+    def test_explicit_tp_gradients_match(self, mesh1d):
+        x, w = _r((6, 16), 2), _r((8, 16), 3)
+        for f in (self._f(mesh1d, True), self._f(mesh1d, False)):
+            gw = jax.grad(lambda w: (f(x, w) ** 2).sum())(w)
+            gx = jax.grad(lambda x: (f(x, w) ** 2).sum())(x)
+            gw_ref = jax.grad(lambda w: ((x @ w.T) ** 2).sum())(w)
+            gx_ref = jax.grad(lambda x: ((x @ w.T) ** 2).sum())(x)
+            np.testing.assert_allclose(gw, gw_ref, rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(gx, gx_ref, rtol=1e-4, atol=1e-4)
+
+
+class TestGatherScatterAffines:
+    @pytest.mark.parametrize("explicit_tp", [False, True])
+    def test_gather_affine(self, mesh1d, explicit_tp):
+        pol = Policy.for_mesh(mesh1d, explicit_tp=explicit_tp)
+        x, w = _r((4, 32), 4), _r((32, 24), 5)
+        f = dist_jit(lambda x, w: L.affine_gather(x, w, axis="model"),
+                     pol, (Partitioned(None, "model"), Partitioned(None, "model")),
+                     Partitioned(None, "model"))
+        np.testing.assert_allclose(f(x, w), x @ w, rtol=2e-5, atol=2e-5)
+        g = jax.grad(lambda w: (f(x, w) ** 2).sum())(w)
+        g_ref = jax.grad(lambda w: ((x @ w) ** 2).sum())(w)
+        np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("explicit_tp", [False, True])
+    def test_scatter_affine(self, mesh1d, explicit_tp):
+        pol = Policy.for_mesh(mesh1d, explicit_tp=explicit_tp)
+        x, w = _r((4, 32), 6), _r((32, 24), 7)
+        f = dist_jit(lambda x, w: L.affine_scatter(x, w, axis="model"),
+                     pol, (Partitioned(None, "model"), Partitioned("model", None)),
+                     Partitioned(None, "model"))
+        np.testing.assert_allclose(f(x, w), x @ w, rtol=2e-5, atol=2e-5)
+        gx = jax.grad(lambda x: (f(x, w) ** 2).sum())(x)
+        gx_ref = jax.grad(lambda x: ((x @ w) ** 2).sum())(x)
+        np.testing.assert_allclose(gx, gx_ref, rtol=1e-4, atol=1e-4)
+
+
+class TestFusedTransformerSublayer:
+    """The whole attention+FFN sublayer inside ONE shard_map, with the four
+    ring collective-matmuls, vs the single-device reference math."""
+
+    def _setup(self, mesh8):
+        from repro.configs import ModelConfig
+        from repro.models.blocks import sublayer_apply, sublayer_init
+
+        cfg = ModelConfig(name="tp_test", family="dense", num_layers=1,
+                          d_model=64, num_heads=8, num_kv_heads=4,
+                          head_dim=8, d_ff=128, vocab_size=64,
+                          dtype="float32", remat=False, attn_chunk=16)
+        params = sublayer_init(jax.random.PRNGKey(0), cfg, 0, jnp.float32)
+        x = _r((2, 16, 64), 8)
+        positions = jnp.broadcast_to(jnp.arange(16)[None, :], (2, 16))
+        return cfg, params, x, positions, sublayer_apply
+
+    def test_fused_tp_matches_reference(self, mesh8):
+        cfg, params, x, positions, sublayer_apply = self._setup(mesh8)
+        pol = Policy(mesh8, explicit_tp=True, fsdp=False, seq_shard=False)
+
+        def run(policy):
+            y, cache, aux = sublayer_apply(
+                params, x, cfg, policy, 0, positions=positions, mode="train")
+            return y
+
+        y_tp = jax.jit(lambda: run(pol))()
+        y_ref = jax.jit(lambda: run(None))()
+        np.testing.assert_allclose(np.asarray(y_tp), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_fused_tp_gradients_match_reference(self, mesh8):
+        cfg, params, x, positions, sublayer_apply = self._setup(mesh8)
+        pol = Policy(mesh8, explicit_tp=True, fsdp=False, seq_shard=False)
+
+        def loss(p, policy):
+            y, _, _ = sublayer_apply(p, x, cfg, policy, 0,
+                                     positions=positions, mode="train")
+            return (y.astype(jnp.float32) ** 2).sum()
+
+        g_tp = jax.jit(jax.grad(lambda p: loss(p, pol)))(params)
+        g_ref = jax.jit(jax.grad(lambda p: loss(p, None)))(params)
+        flat_tp = jax.tree_util.tree_leaves_with_path(g_tp)
+        flat_ref = dict(jax.tree_util.tree_leaves_with_path(g_ref))
+        for path, leaf in flat_tp:
+            ref = flat_ref[path]
+            np.testing.assert_allclose(
+                np.asarray(leaf), np.asarray(ref), rtol=5e-4, atol=5e-4,
+                err_msg=str(path))
+
+
+class TestPartitionedResolution:
+    def test_mesh_names_pass_through_and_logical_resolve(self, mesh8):
+        pol = Policy(mesh8)
+        from jax.sharding import PartitionSpec as P
+        assert Partitioned("data", "model").resolve(pol) == P("data", "model")
+        assert Partitioned("batch", None, "heads").resolve(pol) == \
+            P("data", None, "model")
+        assert Partitioned().resolve(pol) == P()
+
+    def test_bind_aliases(self, mesh8):
+        pol = Policy.for_mesh(mesh8).bind(fi="model", fo="data", rep=None)
+        from jax.sharding import PartitionSpec as P
+        assert Partitioned("fo", "fi").resolve(pol) == P("data", "model")
+        assert Partitioned("rep").resolve(pol) == P(None)

@@ -10,11 +10,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
+
 
 from repro.core import adjoint_test
+from repro import compat
 from repro.core import layers as L
-from repro.core import primitives as prim
+
+from repro.core.compile import dist_jit
+from repro.sharding import Partitioned, Policy
 
 
 def _r(shape, seed=0):
@@ -23,13 +26,25 @@ def _r(shape, seed=0):
 
 class TestDistAffine:
     def test_matches_sequential_2d_weight_partition(self, mesh8):
-        # w on P_fo x P_fi = (data=2) x (model=4) — the paper's P_w grid.
+        # NEW API: w on P_fo x P_fi = (data=2) x (model=4) — the paper's P_w
+        # grid — declared once with Partitioned and run through dist_jit.
         x = _r((6, 16), 0)
         w = _r((8, 16), 1)
         b = _r((8,), 2)
-        y = L.dist_affine(mesh8, x, w, b, fo_axis="data", fi_axis="model")
+        f = dist_jit(
+            lambda x, w, b: L.affine(x, w, b, fo_axis="data", fi_axis="model"),
+            Policy.for_mesh(mesh8),
+            (Partitioned(None, "model"), Partitioned("data", "model"),
+             Partitioned("data")),
+            Partitioned(None, "data"))
         ref = x @ w.T + b
-        np.testing.assert_allclose(y, ref, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(f(x, w, b), ref, rtol=2e-5, atol=2e-5)
+
+    def test_legacy_shim_matches_sequential(self, mesh8):
+        # the seed's one-shard_map-per-layer signature must keep working
+        x, w, b = _r((6, 16), 0), _r((8, 16), 1), _r((8,), 2)
+        y = L.dist_affine(mesh8, x, w, b, fo_axis="data", fi_axis="model")
+        np.testing.assert_allclose(y, x @ w.T + b, rtol=2e-5, atol=2e-5)
 
     def test_gradients_match_sequential(self, mesh8):
         x, w, b = _r((6, 16), 3), _r((8, 16), 4), _r((8,), 5)
@@ -66,8 +81,7 @@ class TestDistAffine:
 
 class TestDistConv:
     def test_conv2d_same_matches_lax(self, mesh1d):
-        mesh = jax.make_mesh((2, 2, 2), ("ci", "h", "w"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = compat.make_mesh((2, 2, 2), ("ci", "h", "w"))
         x = _r((2, 4, 8, 8), 10)   # NCHW
         w = _r((6, 4, 3, 3), 11)   # OIHW
         b = _r((6,), 12)
@@ -81,8 +95,7 @@ class TestDistConv:
         np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-4)
 
     def test_conv2d_grads_match(self, mesh1d):
-        mesh = jax.make_mesh((2, 4), ("h", "w"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("h", "w"))
         x = _r((2, 3, 8, 8), 13)
         w = _r((5, 3, 3, 3), 14)
 
@@ -121,8 +134,7 @@ class TestDistConv:
 class TestDistPool:
     @pytest.mark.parametrize("op", ["max", "avg"])
     def test_pool_matches_lax(self, mesh1d, op):
-        mesh = jax.make_mesh((2, 4), ("h", "w"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("h", "w"))
         x = _r((2, 3, 8, 16), 19)
         y = L.dist_pool(mesh, x, k=2, stride=2, op=op, spatial_axes=("h", "w"))
         red = jax.lax.max if op == "max" else jax.lax.add
@@ -136,8 +148,7 @@ class TestDistPool:
     def test_overlapping_pool_halo(self, mesh1d):
         # k=3, stride=1 needs a width-2 right halo (k - stride).
         x = _r((1, 1, 32), 20)
-        mesh = jax.make_mesh((8,), ("s",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("s",))
         y = L.dist_pool(mesh, x, k=3, stride=1, op="max", spatial_axes=("s",))
         ref = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 1, 3),
                                     (1, 1, 1), "VALID")

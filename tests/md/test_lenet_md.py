@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
+
 from repro.models.lenet import (lenet_apply_distributed,
                                 lenet_apply_sequential, lenet_init,
                                 synthetic_mnist, table1_local_shapes)
@@ -14,8 +16,7 @@ from repro.models.lenet import (lenet_apply_distributed,
 def mesh22():
     if len(jax.devices()) < 4:
         pytest.skip("needs 4 devices")
-    return jax.make_mesh((2, 2), ("fo", "fi"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 2), ("fo", "fi"))
 
 
 def test_forward_matches_sequential(mesh22):

@@ -1,0 +1,139 @@
+"""Eq. 13 adjoint tests for the operator algebra (core/linop.py) on a REAL
+8-device mesh: every concrete LinearOp, hand-built multi-op composites, and
+randomly composed operator chains — plus the structural reversal law
+``(A @ B).T == B.T @ A.T``.
+"""
+
+import random
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import linop
+from repro.core.linop import check_adjoint
+from repro.core.partition import compute_halos
+
+AX = "model"
+
+CONCRETE_OPS = [
+    (linop.Identity(), (16, 3)),
+    (linop.Broadcast(AX), (4, 3)),
+    (linop.SumReduce(AX), (16, 3)),
+    (linop.AllReduce(AX), (16, 3)),
+    (linop.AllGather(AX, 0), (16, 3)),
+    (linop.ReduceScatter(AX, 0), (128, 3)),
+    (linop.AllToAll(AX, 1, 0), (8, 8, 4)),
+    (linop.SendRecv(AX, 1), (16, 2)),
+    (linop.SendRecv(AX, -2), (16, 2)),
+    (linop.HaloExchange(AX, 0, 2, 1), (32, 3)),
+    (linop.HaloAccumulate(AX, 0, 2, 1), (56, 3)),
+    (linop.HaloExchange(AX, 0,
+                        left_widths=(0, 1, 2, 0, 1, 2, 0, 1),
+                        right_widths=(1, 0, 2, 1, 0, 2, 1, 0)), (32, 2)),
+]
+
+
+@pytest.mark.parametrize("op,shape", CONCRETE_OPS,
+                         ids=[repr(o) for o, _ in CONCRETE_OPS])
+def test_every_concrete_op_passes_eq13(mesh1d, op, shape):
+    r = check_adjoint(op, mesh1d, shape)
+    assert r.passed, r
+
+
+@pytest.mark.parametrize("op,shape", CONCRETE_OPS,
+                         ids=[repr(o) for o, _ in CONCRETE_OPS])
+def test_every_adjoint_op_passes_eq13(mesh1d, op, shape):
+    # op.T is itself a first-class op: run Eq. 13 on it directly (its input
+    # shape is the global shape of op's output).
+    fx_shape = linop.lift(op, mesh1d, len(shape))(jnp.zeros(shape)).shape
+    r = check_adjoint(op.T, mesh1d, fx_shape)
+    assert r.passed, r
+
+
+COMPOSITES = [
+    # the ISSUE's example chain: gather, shift, then halo-exchange
+    (linop.HaloExchange(AX, 0, 1, 1) @ linop.SendRecv(AX, 1)
+     @ linop.AllGather(AX, 0), (16, 3)),
+    # A = B∘R assembled from parts must behave like (and adjoint like) the
+    # self-adjoint all-reduce (paper §3)
+    (linop.Broadcast(AX) @ linop.SumReduce(AX), (16, 3)),
+    # partitioned round-trip with a shift in gathered space
+    (linop.ReduceScatter(AX, 0) @ linop.SendRecv(AX, -1)
+     @ linop.AllGather(AX, 0), (16, 3)),
+    # halo round-trip: H* H is symmetric positive semi-definite
+    (linop.HaloExchange(AX, 0, 2, 1).T @ linop.HaloExchange(AX, 0, 2, 1),
+     (32, 3)),
+    # unbalanced halo into an all-reduce
+    (linop.AllReduce(AX) @ linop.HaloExchange(
+        AX, 0, left_widths=(0, 1, 1, 0, 1, 1, 0, 1),
+        right_widths=(1, 1, 0, 1, 1, 0, 1, 0)), (32, 2)),
+]
+
+
+@pytest.mark.parametrize("op,shape", COMPOSITES,
+                         ids=[f"chain{i}" for i in range(len(COMPOSITES))])
+def test_composites_pass_eq13(mesh1d, op, shape):
+    r = check_adjoint(op, mesh1d, shape)
+    assert r.passed, r
+
+
+def test_reversal_law_structural():
+    A = linop.HaloExchange(AX, 0, 1, 1)
+    B = linop.SendRecv(AX, 1)
+    C = linop.AllGather(AX, 0)
+    assert (A @ B @ C).T == C.T @ B.T @ A.T
+    assert (A @ B).T == B.T @ A.T
+    assert (A @ B).T.T == A @ B
+    # adjoint pairs registered centrally
+    assert linop.AllGather(AX, 2).T == linop.ReduceScatter(AX, 2)
+    assert linop.SumReduce(AX).T == linop.Broadcast(AX)
+    assert linop.AllToAll(AX, 1, 0).T == linop.AllToAll(AX, 0, 1)
+    assert linop.SendRecv(AX, 3).T == linop.SendRecv(AX, -3)
+    assert linop.AllReduce(AX).T == linop.AllReduce(AX)
+
+
+def _random_chain(rng, n_ops: int, local0: int):
+    """Random block-wise chain with shape tracking (all ops use dim 0)."""
+    ops, local = [], local0
+    for _ in range(n_ops):
+        kind = rng.choice(["send", "allreduce", "halo", "gather"])
+        if kind == "send":
+            ops.append(linop.SendRecv(AX, rng.choice([-2, -1, 1, 2])))
+        elif kind == "allreduce":
+            ops.append(linop.AllReduce(AX))
+        elif kind == "halo":
+            left, right = rng.randint(0, 2), rng.randint(0, 2)
+            ops.append(linop.HaloExchange(AX, 0, left, right))
+            local += left + right
+        else:
+            ops.append(linop.AllGather(AX, 0))
+            local *= 8
+        if local > 512:  # keep the test cheap
+            break
+    chain = ops[0]
+    for op in ops[1:]:
+        chain = op @ chain  # apply in generation order
+    return chain
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_random_chains_pass_eq13(mesh1d, seed):
+    rng = random.Random(seed)
+    chain = _random_chain(rng, rng.randint(3, 5), 4)
+    r = check_adjoint(chain, mesh1d, (32, 2),
+                      name=f"random_chain_{seed}")
+    assert r.passed, r
+    # reversal law holds for the random chain too
+    assert chain.T == linop.Compose(
+        tuple(op.T for op in reversed(chain.ops)))
+    assert chain.T.T == chain
+
+
+def test_unbalanced_halo_from_partition_geometry(mesh1d):
+    # Widths computed by the paper's App. B machinery drive the op directly.
+    specs = compute_halos(32, 8, 5, padding=2)
+    op = linop.HaloExchange(AX, 0,
+                            left_widths=[s.left_halo for s in specs],
+                            right_widths=[s.right_halo for s in specs])
+    r = check_adjoint(op, mesh1d, (32, 2), name="halo_appB")
+    assert r.passed, r

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
+from repro import compat
 from repro.models.moe import moe_apply, moe_init
 from repro.sharding import Policy
 
@@ -19,8 +20,7 @@ def setup():
     cfg = dataclasses.replace(cfg, capacity_factor=4.0)  # avoid drops: exact
     key = jax.random.PRNGKey(0)
     p = moe_init(key, cfg, jnp.float32)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     policy = Policy(mesh=mesh)
     return cfg, p, policy
 

@@ -54,18 +54,19 @@ import os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, "{src}")
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.checkpoint import ckpt as ckpt_lib
 
 d = "{dir}"
 # save on a (4,) mesh
-mesh_a = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+mesh_a = compat.make_mesh((4,), ("model",))
 arr = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                      NamedSharding(mesh_a, P("model", None)))
 ckpt_lib.save(d, 1, {{"w": arr}})
 
 # restore on a DIFFERENT mesh shape (2, 2): the elastic-scaling path
-mesh_b = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh_b = compat.make_mesh((2, 2), ("data", "model"))
 like = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
 shd = {{"w": NamedSharding(mesh_b, P("data", "model"))}}
 restored, step = ckpt_lib.restore(d, like=like, shardings=shd)

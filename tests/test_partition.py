@@ -1,15 +1,13 @@
 """Partition + halo geometry vs the paper's Appendix B worked examples."""
 
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core.partition import (
     TensorPartition,
     balanced_split,
     compute_halos,
     conv_output_size,
-    shard_offsets,
 )
 from repro.core.partition import max_halo_widths
 

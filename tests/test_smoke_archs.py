@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, applicable_shapes, get_config, reduced
-from repro.models import forward, init_cache, init_params
+from repro.models import forward, init_params
 from repro.optim import make_optimizer
 from repro.train import build_train_step, init_train_state
 

@@ -4,11 +4,8 @@ injected fault, checkpoint atomicity, straggler monitor."""
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs import get_config, reduced
 from repro.data import DataConfig, SyntheticLM
 from repro.models import init_params
