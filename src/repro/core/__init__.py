@@ -8,6 +8,8 @@
 - ``layers``      distributed affine/conv/pool/embedding   (paper §4)
 - ``compile``     dist_jit: whole-block fusion into one shard_map
 - ``overlap``     ring collective-matmul compute/comm overlap (beyond paper)
+- ``pipeline``    pipeline parallelism: StageBoundary adjoint op + 1F1B /
+                  fill-drain microbatch schedules (paper §3 send/recv)
 """
 
 from . import (  # noqa: F401
@@ -18,12 +20,21 @@ from . import (  # noqa: F401
     memory,
     overlap,
     partition,
+    pipeline,
     primitives,
 )
 
 from .adjoint import adjoint_test, inner, norm  # noqa: F401
 from .compile import dist_jit  # noqa: F401
 from .linop import check_adjoint  # noqa: F401
+from .pipeline import (  # noqa: F401
+    Schedule,
+    StageBoundary,
+    make_schedule,
+    pipeline_value_and_grad,
+    schedule_1f1b,
+    schedule_fill_drain,
+)
 from .partition import (  # noqa: F401
     TensorPartition,
     balanced_split,

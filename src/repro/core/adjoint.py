@@ -41,10 +41,13 @@ def inner(a, b) -> jax.Array:
 
 
 def norm(a) -> jax.Array:
+    """Induced norm sqrt(<a, a>) over a pytree (paper Eq. 13 denominator)."""
     return jnp.sqrt(inner(a, a))
 
 
 class AdjointReport:
+    """Outcome of one Eq. 13 coherence test: name, rel_err, pass/fail."""
+
     def __init__(self, name: str, rel_err: float, eps: float):
         self.name = name
         self.rel_err = float(rel_err)

@@ -40,6 +40,7 @@ _STACK: list[DistContext] = []
 
 
 def current_ctx() -> DistContext | None:
+    """The innermost active DistContext, or None outside dist_jit bodies."""
     return _STACK[-1] if _STACK else None
 
 

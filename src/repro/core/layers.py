@@ -34,6 +34,7 @@ the bias only where ``axis_index(fi) == 0``.
 
 from __future__ import annotations
 
+import warnings
 from typing import Sequence
 
 import jax
@@ -64,6 +65,21 @@ __all__ = [
     "dist_pool",
     "dist_embedding",
 ]
+
+
+def _warn_deprecated(name: str, replacement: str) -> None:
+    """Deprecation signal for the seed-era one-shard_map-per-layer shims.
+
+    The shims stay numerically identical to the fused path (they are routed
+    through dist_jit; asserted in tests/md/test_deprecation.py) but preclude
+    cross-layer collective/compute overlap.  See README.md, 'Migrating off
+    the dist_* shims'.
+    """
+    warnings.warn(
+        f"{name} is a deprecated one-shard_map-per-layer shim; declare "
+        f"Partitioned specs once and call {replacement} inside a dist_jit "
+        "region instead (README.md: 'Migrating off the dist_* shims')",
+        DeprecationWarning, stacklevel=3)
 
 
 def _ax(name):
@@ -189,6 +205,7 @@ def dist_affine(mesh, x, w, b=None, *, fo_axis="model", fi_axis=None,
     Partition: w over (fo_axis, fi_axis); x over (batch_axis, fi_axis);
     y over (batch_axis, fo_axis).
     """
+    _warn_deprecated("dist_affine", "layers.affine")
     xdims = [None] * (x.ndim - 1)
     if batch_axis is not None:
         xdims[0] = batch_axis
@@ -245,6 +262,7 @@ dist_conv1d_causal_fn = conv1d_causal  # deprecated alias (seed body name)
 def dist_conv1d_causal(mesh, x, w, *, seq_axis="model", batch_axis="data"):
     """Depthwise causal conv1d with the sequence dim sharded over
     ``seq_axis``.  DEPRECATED legacy shim (see dist_affine)."""
+    _warn_deprecated("dist_conv1d_causal", "layers.conv1d_causal")
 
     def body(xx, ww):
         return conv1d_causal(xx, ww, seq_axis=seq_axis)
@@ -315,6 +333,7 @@ def dist_conv_same(mesh, x, w, b=None, *, spatial_axes: Sequence[str | None],
     Global shapes: x (n_b, n_ci, m_0..m_{D-1}), w (n_co, n_ci, k_0..k_{D-1}),
     b (n_co,).
     """
+    _warn_deprecated("dist_conv_same", "layers.conv_same")
     D = len(spatial_axes)
     in_parts = [
         Partitioned(batch_axis, ci_axis, *spatial_axes),
@@ -379,6 +398,7 @@ def dist_pool(mesh, x, *, k: int, stride: int, op: str = "max",
               spatial_axes: Sequence[str | None], batch_axis=None,
               channel_axis=None):
     """Distributed pooling.  DEPRECATED legacy shim."""
+    _warn_deprecated("dist_pool", "layers.pool")
     part = Partitioned(batch_axis, channel_axis, *spatial_axes)
 
     def body(xx):
@@ -421,6 +441,7 @@ def dist_embedding_fn(ids, table, *, vocab_axis: str):
 
 def dist_embedding(mesh, ids, table, *, vocab_axis="model", batch_axis="data"):
     """Vocab-sharded embedding.  DEPRECATED legacy shim."""
+    _warn_deprecated("dist_embedding", "layers.embedding")
 
     def body(ii, tt):
         return embedding(ii, tt, vocab_axis=vocab_axis)

@@ -30,6 +30,17 @@ it lifts F and F* to global operators via ``shard_map`` and verifies BOTH
 
 Every concrete op and every composite built from them must pass it; see
 tests/md/test_linop.py.
+
+The adjoint pairing and the reversal law are structural (frozen-dataclass
+equality), so they hold without touching a device::
+
+    >>> AllGather("tp", 1).T == ReduceScatter("tp", 1)
+    True
+    >>> (AllGather("tp", 1) @ ReduceScatter("tp", 0)).T == (
+    ...     AllGather("tp", 0) @ ReduceScatter("tp", 1))
+    True
+    >>> AllReduce("tp").T == AllReduce("tp")
+    True
 """
 
 from __future__ import annotations
@@ -106,7 +117,11 @@ class LinearOp:
 
 @dataclass(frozen=True)
 class Compose(LinearOp):
-    """``Compose((A, B, C))(x) == A(B(C(x)))`` — matrix-product order."""
+    """``Compose((A, B, C))(x) == A(B(C(x)))`` — matrix-product order.
+
+    Adjoint: the paper §2 reversal law ``(A B)* = B* A*``, held structurally
+    (``(A @ B).T == B.T @ A.T`` is an actual ``==``).
+    """
 
     ops: Tuple[LinearOp, ...]
 
@@ -128,7 +143,7 @@ class Compose(LinearOp):
 
 @dataclass(frozen=True)
 class Identity(LinearOp):
-    """I — neutral element; self-adjoint."""
+    """I — neutral element of the algebra (paper §2); adjoint: I* = I."""
 
     def __call__(self, x):
         return x
@@ -208,7 +223,9 @@ class AllReduce(LinearOp):
 
 @dataclass(frozen=True)
 class AllGather(LinearOp):
-    """Partitioned broadcast along tensor ``dim``; adjoint = ReduceScatter."""
+    """Partitioned broadcast along tensor ``dim`` (paper §3: B applied
+    block-wise, each worker's subset copied to all).  Adjoint: the
+    partitioned Eq. 9 sum-reduction, ``ReduceScatter(axis, dim)``."""
 
     axis: str
     dim: int = 0
@@ -228,7 +245,9 @@ class AllGather(LinearOp):
 
 @dataclass(frozen=True)
 class ReduceScatter(LinearOp):
-    """Partitioned sum-reduce along ``dim``; adjoint = AllGather."""
+    """Partitioned sum-reduce along ``dim`` (paper §3: R applied block-wise).
+    Adjoint: the partitioned broadcast, ``AllGather(axis, dim)`` — the R*/B
+    pair of Eq. 9 on blocks."""
 
     axis: str
     dim: int = 0
@@ -270,8 +289,10 @@ class AllToAll(LinearOp):
 
 @dataclass(frozen=True)
 class SendRecv(LinearOp):
-    """Non-periodic ring shift by ``offset`` (paper §3 send/receive); the
-    adjoint is the reverse shift."""
+    """Non-periodic ring shift by ``offset`` (paper §3 send/receive; absent
+    sources yield zeros — the §2 fresh-allocation convention).  Adjoint:
+    ``SendRecv(axis, -offset)``, the reverse shift.  Subclassed by
+    ``pipeline.StageBoundary`` for stage-to-stage movement."""
 
     axis: str
     offset: int = 1

@@ -1,0 +1,415 @@
+"""Pipeline parallelism from adjoint SendRecv operators (paper §3, DESIGN §4).
+
+The paper's thesis — every parallel data movement is a linear operator with
+a hand-derived adjoint — extends across the *compute-node boundary* the
+paper motivates: stage-to-stage activation movement along a ``pipe`` mesh
+axis is the :class:`StageBoundary` operator, a non-periodic ring shift built
+from ``primitives.send_recv``.  Its adjoint is the reversed-offset receive
+(``StageBoundary(axis, k).T == StageBoundary(axis, -k)``), verified by the
+generic Eq. 13 ``check_adjoint`` harness on the pipe axis of a pipe x tensor
+2-D mesh (tests/md/test_pipeline.py).
+
+On top of the boundary operator sits a microbatch scheduler.  A
+:class:`Schedule` is a static (ticks x stages) table of F/B/idle slots plus
+the matching receive tables, produced by two generators:
+
+- :func:`schedule_fill_drain` — GPipe: all forwards, then all backwards.
+  Activation buffer depth M (every microbatch in flight at once).
+- :func:`schedule_1f1b` — one-forward-one-backward: stage s runs S-1-s
+  warmup forwards, then alternates F/B, then drains.  Same bubble fraction
+  (S-1)/(M+S-1) per phase under equal F/B cost, but activation buffer depth
+  min(S, M) — the memory win that lets M grow (DESIGN §4).
+
+:func:`pipeline_value_and_grad` executes a schedule inside ONE ``dist_jit``
+region over the (pipe, model) mesh.  Following the paper, the backward pass
+is NOT produced by differentiating the scheduler loop: each backward slot
+re-runs the stage body under ``jax.vjp`` at the saved stage input
+(rematerialized residuals) and the resulting cotangent crosses the stage
+boundary through the *adjoint* operator ``StageBoundary(axis).T``.  Because
+the region is a single shard_map over the full mesh, tensor-parallel ring
+collectives keep working *inside* stage bodies (pipe x tensor composition).
+
+SPMD uniformity: collectives must execute on every device every tick, so
+the executor computes both the F and the B data path each tick and masks
+the inactive one by the schedule tables — the schedule governs dataflow
+(which microbatch lands where, and when), not trace structure.
+
+Schedules and the adjoint pairing are static and device-free::
+
+    >>> StageBoundary("pipe").T == StageBoundary("pipe", -1)
+    True
+    >>> s = schedule_1f1b(8, 4)
+    >>> s.num_ticks, s.fwd_depth, schedule_fill_drain(8, 4).fwd_depth
+    (22, 4, 8)
+    >>> round(s.bubble_fraction(), 3)       # (S-1)/(M+S-1)
+    0.273
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compile import dist_jit
+from .linop import SendRecv
+
+__all__ = [
+    "StageBoundary",
+    "Schedule",
+    "schedule_fill_drain",
+    "schedule_1f1b",
+    "make_schedule",
+    "pipeline_value_and_grad",
+]
+
+_IDLE, _FWD, _BWD = 0, 1, 2
+
+
+@dataclass(frozen=True)
+class StageBoundary(SendRecv):
+    """Stage boundary on the ``pipe`` mesh axis (paper §3 send/receive).
+
+    Forward: copy this stage's activation to the stage ``offset`` positions
+    downstream (non-periodic — the first/last stage receives zeros, the
+    paper's fresh-allocation convention).  Adjoint identity:
+    ``StageBoundary(axis, k).T == StageBoundary(axis, -k)`` — the cotangent
+    of a send is the reversed-offset receive, which is exactly how the 1F1B
+    executor returns gradients upstream.  Eq. 13-checked on the pipe axis
+    in tests/md/test_pipeline.py.
+    """
+
+    def _adjoint(self) -> "StageBoundary":
+        """Reversed-offset boundary (the backward send)."""
+        return StageBoundary(self.axis, -self.offset)
+
+
+# ---------------------------------------------------------------------------
+# Schedules.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Schedule:
+    """A static microbatch schedule: per-(tick, stage) op and index tables.
+
+    ``ops[t, s]``    0 idle / 1 forward / 2 backward for stage s at tick t.
+    ``mbs[t, s]``    the microbatch index the op acts on (0 when idle).
+    ``recv_f[t, s]`` microbatch whose forward activation arrives at stage s
+                     at the END of tick t (-1: none) — i.e. stage s-1 ran F.
+    ``recv_b[t, s]`` microbatch whose cotangent arrives from stage s+1 at
+                     the END of tick t (-1: none).
+    ``fwd_depth`` / ``bwd_depth``: minimal activation / cotangent ring-buffer
+    depths such that modular slot assignment (m % depth) is collision-free
+    for the liveness intervals this schedule induces — the schedule's peak
+    in-flight microbatch count, the quantity 1F1B optimizes.
+    """
+
+    name: str
+    num_stages: int
+    num_microbatches: int
+    ops: np.ndarray
+    mbs: np.ndarray
+    recv_f: np.ndarray
+    recv_b: np.ndarray
+    fwd_depth: int
+    bwd_depth: int
+
+    @property
+    def num_ticks(self) -> int:
+        """Total wall-clock ticks (each tick = one F or B slot per stage)."""
+        return int(self.ops.shape[0])
+
+    def bubble_fraction(self) -> float:
+        """Idle stage-ticks / total stage-ticks — the pipeline bubble."""
+        return float((self.ops == _IDLE).mean())
+
+    def counts(self) -> tuple[int, int, int]:
+        """(#forward, #backward, #idle) slots over the whole table."""
+        return (int((self.ops == _FWD).sum()), int((self.ops == _BWD).sum()),
+                int((self.ops == _IDLE).sum()))
+
+
+def _greedy_schedule(name: str, num_microbatches: int, num_stages: int,
+                     in_flight_cap) -> Schedule:
+    """Tick-synchronous greedy scheduler.
+
+    At every tick each stage, using only information from STRICTLY EARLIER
+    ticks (data crosses a boundary between ticks), runs a forward if its
+    next microbatch's input has arrived and its in-flight count is below
+    ``in_flight_cap(stage)``, else a backward if a cotangent has arrived,
+    else idles.  ``cap = M`` reproduces GPipe fill-drain; ``cap = S - s``
+    reproduces the classic non-interleaved 1F1B pattern.
+    """
+    M, S = num_microbatches, num_stages
+    if M < 1 or S < 1:
+        raise ValueError(f"need M >= 1 microbatches and S >= 1 stages, got "
+                         f"M={M}, S={S}")
+    f_done = [[None] * M for _ in range(S)]   # tick when F_s(m) completed
+    b_done = [[None] * M for _ in range(S)]   # tick when B_s(m) completed
+    next_f = [0] * S
+    next_b = [0] * S
+    rows_op, rows_mb = [], []
+    t = 0
+    while any(nb < M for nb in next_b):
+        if t > 4 * (M + S) * max(M, S):
+            raise RuntimeError(f"schedule {name!r} failed to converge")
+        op_row, mb_row = [_IDLE] * S, [0] * S
+        for s in range(S):
+            mf, mb_ = next_f[s], next_b[s]
+            f_ready = mf < M and (
+                s == 0 or (f_done[s - 1][mf] is not None
+                           and f_done[s - 1][mf] < t))
+            if s == S - 1:
+                b_ready = mb_ < M and (f_done[s][mb_] is not None
+                                       and f_done[s][mb_] < t)
+            else:
+                b_ready = mb_ < M and (b_done[s + 1][mb_] is not None
+                                       and b_done[s + 1][mb_] < t)
+            if f_ready and (mf - mb_) < in_flight_cap(s):
+                op_row[s], mb_row[s] = _FWD, mf
+                f_done[s][mf] = t
+                next_f[s] += 1
+            elif b_ready:
+                op_row[s], mb_row[s] = _BWD, mb_
+                b_done[s][mb_] = t
+                next_b[s] += 1
+        rows_op.append(op_row)
+        rows_mb.append(mb_row)
+        t += 1
+    ops = np.asarray(rows_op, np.int32)
+    mbs = np.asarray(rows_mb, np.int32)
+    T = ops.shape[0]
+
+    # Receive tables: what lands in each stage's buffers at tick end.
+    recv_f = np.full((T, S), -1, np.int32)
+    recv_b = np.full((T, S), -1, np.int32)
+    for tt in range(T):
+        for s in range(S):
+            if s > 0 and ops[tt, s - 1] == _FWD:
+                recv_f[tt, s] = mbs[tt, s - 1]
+            if s < S - 1 and ops[tt, s + 1] == _BWD:
+                recv_b[tt, s] = mbs[tt, s + 1]
+
+    # Minimal collision-free ring-buffer depths under modular slots.
+    def min_depth(intervals_per_stage):
+        for d in range(1, M + 1):
+            ok = True
+            for iv in intervals_per_stage:
+                for m, (w, r) in iv.items():
+                    for m2 in range(m + d, M, d):
+                        if m2 in iv and iv[m2][0] <= r:
+                            ok = False
+            if ok:
+                return d
+        return M
+
+    f_iv, b_iv = [], []
+    for s in range(S):
+        # activation for m: written when it arrives (or, stage 0, at its own
+        # F tick); last read at this stage's B tick (the re-vjp input).
+        f_iv.append({m: ((f_done[s][m] if s == 0 else f_done[s - 1][m]),
+                         b_done[s][m]) for m in range(M)})
+        # cotangent for m: written at stage s+1's B tick; read at ours.
+        if s < S - 1:
+            b_iv.append({m: (b_done[s + 1][m], b_done[s][m])
+                         for m in range(M)})
+    return Schedule(name, S, M, ops, mbs, recv_f, recv_b,
+                    min_depth(f_iv), max(min_depth(b_iv), 1))
+
+
+def schedule_fill_drain(num_microbatches: int, num_stages: int) -> Schedule:
+    """GPipe: fill the pipe with all M forwards, then drain all backwards.
+
+    Bubble fraction (S-1)/(M+S-1) per phase; activation buffer depth M.
+    """
+    return _greedy_schedule("fill_drain", num_microbatches, num_stages,
+                            lambda s: num_microbatches)
+
+
+def schedule_1f1b(num_microbatches: int, num_stages: int) -> Schedule:
+    """Non-interleaved 1F1B: stage s holds at most S-s microbatches in
+    flight (S-1-s warmup forwards, then alternate F/B, then drain).
+
+    Same bubble as fill-drain under equal F/B cost; activation buffer depth
+    min(S, M) instead of M — the Megatron-LM memory argument.
+    """
+    S = num_stages
+    return _greedy_schedule("1f1b", num_microbatches, num_stages,
+                            lambda s: S - s)
+
+
+def make_schedule(name: str, num_microbatches: int, num_stages: int) -> Schedule:
+    """Look up a schedule generator by name ('fill_drain' | '1f1b')."""
+    gens = {"fill_drain": schedule_fill_drain, "1f1b": schedule_1f1b}
+    if name not in gens:
+        raise ValueError(f"unknown schedule {name!r}; have {sorted(gens)}")
+    return gens[name](num_microbatches, num_stages)
+
+
+# ---------------------------------------------------------------------------
+# The SPMD executor.
+# ---------------------------------------------------------------------------
+
+def _masked_add(acc, contrib, mask):
+    return jax.tree_util.tree_map(
+        lambda a, g: a + jnp.where(mask, g, jnp.zeros((), g.dtype)), acc,
+        contrib)
+
+
+def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
+                            params_parts, x_parts, y_parts,
+                            pre_psum_axes=(), post_psum_axes=(), jit=True):
+    """Build ``f(params, xs, ys) -> (loss, grads)`` for a scheduled pipeline.
+
+    The returned function runs the whole schedule inside ONE shard_map over
+    ``policy.mesh`` (via ``dist_jit``), computing the mean microbatch loss
+    AND the parameter gradients — the backward pass is hand-scheduled from
+    the adjoint ``StageBoundary`` operator, not produced by differentiating
+    the loop (the paper's manual-adjoint stance, lifted to whole pipelines).
+
+    Args:
+      pre_fn:   ``(params['pre'], microbatch_x) -> act`` — the stage-0-only
+                prologue (e.g. embedding + feature shard for explicit TP).
+      stage_fn: ``(stage_params, act) -> act`` — the homogeneous stage body,
+                applied by every pipe rank to its own stage's parameters;
+                must preserve the activation's shape/dtype.  May use the
+                context-aware TP layer API (the model axis is live).
+      post_fn:  ``(params['post'], act, microbatch_y) -> scalar loss`` — the
+                last-stage-only epilogue (final norm, head, loss).
+      policy:   ``sharding.Policy`` with ``pipe_axis`` set; supplies the
+                mesh and the model-axis bindings for TP inside stages.
+      schedule: a :class:`Schedule` (its stage count must equal the pipe
+                axis size).
+      params_parts: pytree of ``Partitioned`` declarations matching a
+                ``{"pre", "stage", "post"}`` params tree.  Stage leaves are
+                stacked ``(num_stages, ...)`` and MUST lead with the pipe
+                axis; pre/post leaves must resolve pipe-replicated.
+      x_parts / y_parts: boundary declarations for the microbatched inputs
+                (leading dim = num_microbatches, pipe-replicated).
+      pre_psum_axes / post_psum_axes: mesh axes over which pre/post param
+                cotangents are CONTRIBUTIONS to be summed (DESIGN §2.1) —
+                e.g. the model axis when ``pre_fn`` ends in a feature
+                shard-slice.  Leave empty for replicated cotangents.
+      jit: wrap in jax.jit (as dist_jit).
+
+    Returns:
+      ``f(params, xs, ys) -> (loss, grads)`` with ``grads`` matching
+      ``params``; both are normalized by the microbatch count.
+    """
+    pipe_axis = policy.pipe_axis
+    if pipe_axis is None:
+        raise ValueError("pipeline_value_and_grad needs policy.pipe_axis")
+    S, M = schedule.num_stages, schedule.num_microbatches
+    if policy.axis_size(pipe_axis) != S:
+        raise ValueError(
+            f"schedule has {S} stages but mesh axis {pipe_axis!r} has size "
+            f"{policy.axis_size(pipe_axis)}")
+    boundary = StageBoundary(pipe_axis)          # forward send
+    boundary_T = boundary.T                      # adjoint: backward send
+
+    ops = jnp.asarray(schedule.ops)
+    mbs = jnp.asarray(schedule.mbs)
+    recv_f = jnp.asarray(schedule.recv_f)
+    recv_b = jnp.asarray(schedule.recv_b)
+    fdep, bdep = schedule.fwd_depth, schedule.bwd_depth
+
+    def body(params, xs, ys):
+        s = jax.lax.axis_index(pipe_axis)
+        p_pre, p_post = params["pre"], params["post"]
+        # stage leaves arrive pipe-sliced: (1, ...) — drop the stage dim.
+        p_stage = jax.tree_util.tree_map(lambda a: jnp.squeeze(a, 0),
+                                         params["stage"])
+
+        def mb_slice(tree, m):
+            return jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, m, 0,
+                                                       keepdims=False), tree)
+
+        x0_sds = jax.eval_shape(pre_fn, p_pre, mb_slice(xs, 0))
+        act_sds = jax.eval_shape(stage_fn, p_stage, x0_sds)
+        if (act_sds.shape, act_sds.dtype) != (x0_sds.shape, x0_sds.dtype):
+            raise ValueError(
+                f"stage body must preserve the activation: in "
+                f"{x0_sds.shape}/{x0_sds.dtype}, out "
+                f"{act_sds.shape}/{act_sds.dtype}")
+
+        zeros_g = partial(jax.tree_util.tree_map,
+                          lambda a: jnp.zeros(a.shape, jnp.float32))
+        carry = dict(
+            fbuf=jnp.zeros((fdep,) + x0_sds.shape, x0_sds.dtype),
+            bbuf=jnp.zeros((bdep,) + x0_sds.shape, x0_sds.dtype),
+            g_pre=zeros_g(p_pre),
+            g_stage=zeros_g(p_stage),
+            g_post=zeros_g(p_post),
+            loss=jnp.zeros((), jnp.float32),
+        )
+
+        def tick(c, row):
+            op_row, mb_row, rf_row, rb_row = row
+            op, m = op_row[s], mb_row[s]
+            is_f, is_b = op == _FWD, op == _BWD
+            mb_x, mb_y = mb_slice(xs, m), mb_slice(ys, m)
+            slot_f, slot_b = m % fdep, m % bdep
+
+            # ---- one stage evaluation serves BOTH slots: on an F tick the
+            # vjp's primal output is the activation to send; on a B tick
+            # x_in equals the SAVED stage input (s>0 reads the very slot the
+            # boundary filled; s==0 re-runs the deterministic prologue
+            # instead of storing anything — its fbuf slots stay untouched),
+            # so the same vjp is the rematerialized backward — 1F1B's memory
+            # is the fbuf ring, not an AD tape across ticks.
+            x0, vjp_pre = jax.vjp(lambda pp: pre_fn(pp, mb_x), p_pre)
+            fbuf = c["fbuf"]
+            x_in = jnp.where(s == 0, x0, fbuf[slot_f])
+            y, vjp = jax.vjp(stage_fn, p_stage, x_in)
+            loss_m, (g_post_m, gy_post) = jax.value_and_grad(
+                post_fn, argnums=(0, 1))(p_post, y, mb_y)
+            gy = jnp.where(s == S - 1, gy_post.astype(x0_sds.dtype),
+                           c["bbuf"][slot_b])
+            g_stage_m, gx = vjp(gy)
+
+            last_b = is_b & (s == S - 1)
+            first_b = is_b & (s == 0)
+            g_stage = _masked_add(c["g_stage"], g_stage_m, is_b)
+            g_post = _masked_add(c["g_post"], g_post_m, last_b)
+            loss = c["loss"] + jnp.where(last_b, loss_m, 0.0)
+            g_pre = _masked_add(c["g_pre"], vjp_pre(gx)[0], first_b)
+
+            # ---- boundary crossings (uniform every tick): activations ride
+            # the forward operator, cotangents its adjoint.
+            act_in = boundary(jnp.where(is_f, y, jnp.zeros((), y.dtype)))
+            cot_in = boundary_T(jnp.where(is_b, gx, jnp.zeros((), gx.dtype)))
+            rf, rb = rf_row[s], rb_row[s]
+            fbuf = jnp.where(rf >= 0, fbuf.at[rf % fdep].set(act_in), fbuf)
+            bbuf = jnp.where(rb >= 0,
+                             c["bbuf"].at[rb % bdep].set(cot_in), c["bbuf"])
+            return dict(fbuf=fbuf, bbuf=bbuf, g_pre=g_pre, g_stage=g_stage,
+                        g_post=g_post, loss=loss), None
+
+        carry, _ = jax.lax.scan(tick, carry, (ops, mbs, recv_f, recv_b))
+
+        inv_m = 1.0 / M
+        psum_tree = lambda tree, axes: jax.tree_util.tree_map(
+            lambda g: jax.lax.psum(g, axes), tree)
+        # Only the owning stage accumulated pre/post/loss; collect over pipe
+        # (plus any contribution-form model axes — DESIGN §2.1).
+        g_pre = psum_tree(carry["g_pre"], (pipe_axis,) + tuple(pre_psum_axes))
+        g_post = psum_tree(carry["g_post"],
+                           (pipe_axis,) + tuple(post_psum_axes))
+        loss = jax.lax.psum(carry["loss"], pipe_axis) * inv_m
+        scale = partial(jax.tree_util.tree_map, lambda g: g * inv_m)
+        grads = {
+            "pre": scale(g_pre),
+            "stage": jax.tree_util.tree_map(
+                lambda g: jnp.expand_dims(g * inv_m, 0), carry["g_stage"]),
+            "post": scale(g_post),
+        }
+        return loss, grads
+
+    from jax.sharding import PartitionSpec as P
+    out_parts = (P(), params_parts)
+    return dist_jit(body, policy, (params_parts, x_parts, y_parts),
+                    out_parts, jit=jit)

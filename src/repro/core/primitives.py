@@ -38,6 +38,7 @@ __all__ = [
     "sum_reduce",
     "all_reduce",
     "all_gather",
+    "all_gather_replicated",
     "reduce_scatter",
     "all_to_all",
     "send_recv",
@@ -56,6 +57,7 @@ def smap(f, mesh, in_specs, out_specs):
 
 
 def axis_size(axis_name) -> int:
+    """Static size of mesh axis ``axis_name`` (inside a shard_map body)."""
     return compat.axis_size(axis_name)
 
 
@@ -156,6 +158,37 @@ def _all_gather_bwd(axis_name, dim, _, g):
 
 
 all_gather.defvjp(_all_gather_fwd, _all_gather_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def all_gather_replicated(x: jax.Array, axis_name, dim: int) -> jax.Array:
+    """All-gather whose result is consumed IDENTICALLY on every worker.
+
+    Same forward as ``all_gather``, different adjoint: when the gathered
+    value is replicated compute downstream (e.g. the pipeline epilogue,
+    where every model rank evaluates the same loss and the hand-scheduled
+    backward seeds each rank's cotangent at 1 — the REPLICATED cotangent
+    convention, DESIGN §4), the cotangent arriving here is the full, equal
+    gradient on every worker.  The adjoint is then the *restriction* to the
+    worker's own block — a slice, NOT ``psum_scatter``, which would
+    multiply-count the k identical copies (contribution convention,
+    DESIGN §2.1).
+    """
+    return jax.lax.all_gather(x, axis_name, axis=dim, tiled=True)
+
+
+def _agr_fwd(x, axis_name, dim):
+    return all_gather_replicated(x, axis_name, dim), None
+
+
+def _agr_bwd(axis_name, dim, _, g):
+    k = compat.axis_size(axis_name)
+    n = g.shape[dim] // k
+    i = jax.lax.axis_index(axis_name)
+    return (jax.lax.dynamic_slice_in_dim(g, i * n, n, axis=dim),)
+
+
+all_gather_replicated.defvjp(_agr_fwd, _agr_bwd)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2))

@@ -24,3 +24,11 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     """Small mesh over however many (host) devices exist — smoke tests,
     examples, CPU training."""
     return compat.make_mesh(shape, axes)
+
+
+def make_pipeline_mesh(num_stages: int, tp: int = 1):
+    """Pipe x tensor 2-D mesh for pipeline parallelism (core/pipeline.py):
+    stage-to-stage SendRecv moves along ``pipe``, the TP ring collectives
+    along ``model`` inside each stage.  The axis names are fixed —
+    ``Policy.for_mesh`` auto-binds ``pipe_axis`` by name."""
+    return compat.make_mesh((num_stages, tp), ("pipe", "model"))

@@ -38,6 +38,44 @@ def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
             "cache_len": sds((), jnp.int32)}
 
 
+def stage_assignment(cfg: ModelConfig, num_stages: int) -> list[range]:
+    """Per-stage layer ranges for a ``num_stages`` pipeline cut (a planning
+    /reporting helper: what the dry-run and launch tooling print).
+
+    Stages own contiguous runs of whole superblocks (balanced ceil-first
+    split), so the result may be NON-uniform — e.g. 4 superblocks over 3
+    stages is [2, 1, 1].  The SPMD executor (core/pipeline.py) additionally
+    requires uniformity (all pipe ranks run one homogeneous stage body):
+    ``models.to_pipeline_params`` enforces that and raises for exactly the
+    cuts this function reports as unbalanced.
+    """
+    from repro.core.partition import balanced_split
+
+    n_super = cfg.num_layers // cfg.block_period
+    sizes = balanced_split(n_super, num_stages)
+    out, lo = [], 0
+    for sz in sizes:
+        out.append(range(lo * cfg.block_period, (lo + sz) * cfg.block_period))
+        lo += sz
+    return out
+
+
+def pipeline_input_specs(cfg: ModelConfig, shape_name: str,
+                         num_microbatches: int) -> tuple[dict, object]:
+    """Microbatched (xs, labels) specs for the pipeline executor: the train
+    shape cell re-cut to a leading microbatch dim (M, B/M, S)."""
+    cell = SHAPES[shape_name]
+    if cell.kind != "train":
+        raise ValueError(f"pipeline specs need a train cell, got {cell.kind}")
+    B, S = cell.global_batch, cell.seq_len
+    if B % num_microbatches:
+        raise ValueError(f"global batch {B} not divisible by "
+                         f"num_microbatches={num_microbatches}")
+    mb = B // num_microbatches
+    return ({"tokens": sds((num_microbatches, mb, S), jnp.int32)},
+            sds((num_microbatches, mb, S), jnp.int32))
+
+
 def param_specs(cfg: ModelConfig):
     """Parameter ShapeDtypeStructs via eval_shape over the real initializer
     (no allocation)."""

@@ -144,6 +144,47 @@ def sublayer_apply(p, x, cfg, policy, layer: int, *, positions, mode,
     return x, new_cache, aux
 
 
+def pipeline_stage_body(p_stage, x, cfg, policy, *, positions):
+    """One pipeline STAGE on local shards: its stack of superblocks, applied
+    inside the pipeline's shard_map region (core/pipeline.py).
+
+    p_stage: this stage's superblocks, stacked ``(n_super_per_stage, ...)``.
+    x: the local activation shard — ``(B_mb, S, d_model/tp)`` feature-sharded
+    when ``policy.explicit_tp`` (the fused ring-TP sublayer bodies run inside
+    the region, so TP collectives compose with the pipe axis), else the full
+    ``(B_mb, S, d_model)`` residual with plain local math.
+
+    Training math only (no caches / flash kernel); each sublayer must be
+    TP-fusable under explicit_tp (attention mixer, dense/absent FFN).
+    """
+    period = cfg.block_period
+    explicit = policy is not None and getattr(policy, "explicit_tp", False)
+
+    def one_superblock(xx, p_blk):
+        for i in range(period):
+            mixer, ffn = layer_kinds(cfg, i)
+            if ffn == "moe":
+                # sublayer_apply's aux (load-balance) loss has no channel
+                # through the tick schedule; dropping it silently would
+                # diverge from build_train_step.
+                raise NotImplementedError(
+                    "MoE sublayers are not supported in pipeline stages")
+            pp = p_blk[f"pos{i}"]
+            if explicit:
+                if mixer != "attn" or ffn not in ("mlp", "none"):
+                    raise NotImplementedError(
+                        "explicit-TP pipeline stages support attention + "
+                        f"dense-FFN sublayers, got ({mixer}, {ffn})")
+                xx = _tp_sublayer_body(pp, xx, positions, cfg, policy, ffn)
+            else:
+                xx, _, _ = sublayer_apply(pp, xx, cfg, None, i,
+                                          positions=positions, mode="train")
+        return xx, None
+
+    x, _ = jax.lax.scan(one_superblock, x, p_stage)
+    return x
+
+
 def superblock_init(key, cfg, dtype) -> dict:
     period = cfg.block_period
     keys = jax.random.split(key, period)

@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .blocks import superblock_apply, superblock_init
+from .blocks import pipeline_stage_body, superblock_apply, superblock_init
 from .common import dense_init, rmsnorm
 
 
@@ -35,6 +35,143 @@ def init_params(cfg, key, dtype=None):
     if not cfg.tie_embeddings:
         params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
     return params
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-parallel model cut (core/pipeline.py executor glue).
+#
+# The decoder is cut into S homogeneous stages along the layer axis: the
+# stacked superblock parameters (n_super, ...) are re-stacked to
+# (S, n_super/S, ...) with the leading dim sharded over the pipe mesh axis,
+# the embedding becomes the stage-0 prologue and the final-norm + head the
+# last-stage epilogue.  ``to_pipeline_params``/``from_pipeline_params`` are
+# exact inverses so tests can map gradients back onto the dense layout.
+# ---------------------------------------------------------------------------
+
+def _check_pipelineable(cfg):
+    if cfg.tie_embeddings:
+        raise NotImplementedError(
+            "pipeline cut needs untied embeddings (the tied table would "
+            "live on both the first and last stage)")
+    if cfg.frontend != "none":
+        raise NotImplementedError(
+            "pipeline cut supports token frontends only")
+    if cfg.num_experts:
+        raise NotImplementedError(
+            "pipeline cut does not thread the MoE load-balance auxiliary "
+            "loss through the schedule yet; silently dropping it would "
+            "diverge from build_train_step")
+
+
+def to_pipeline_params(cfg, params, num_stages: int):
+    """Re-cut a dense params tree into {'pre', 'stage', 'post'} for
+    ``num_stages`` pipeline stages (stage leaves stacked (S, n_super/S, ...))."""
+    _check_pipelineable(cfg)
+    n_super = cfg.num_layers // cfg.block_period
+    if num_stages < 1 or n_super % num_stages:
+        raise ValueError(
+            f"{n_super} superblocks do not assign uniformly to "
+            f"{num_stages} stages (the SPMD executor needs equal stages)")
+    per = n_super // num_stages
+    stages = jax.tree_util.tree_map(
+        lambda a: a.reshape((num_stages, per) + a.shape[1:]),
+        params["blocks"])
+    return {
+        "pre": {"embed": params["embed"]},
+        "stage": stages,
+        "post": {"norm_final": params["norm_final"],
+                 "lm_head": params["lm_head"]},
+    }
+
+
+def from_pipeline_params(pparams):
+    """Inverse of ``to_pipeline_params``: back to the dense layout."""
+    blocks = jax.tree_util.tree_map(
+        lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]),
+        pparams["stage"])
+    return {"embed": pparams["pre"]["embed"], "blocks": blocks,
+            "norm_final": pparams["post"]["norm_final"],
+            "lm_head": pparams["post"]["lm_head"]}
+
+
+def init_pipeline_params(cfg, key, num_stages: int, dtype=None):
+    """Initialize parameters directly in the pipeline-stage layout."""
+    return to_pipeline_params(cfg, init_params(cfg, key, dtype), num_stages)
+
+
+def pipeline_param_parts(cfg, policy, pparams):
+    """``Partitioned`` declarations for a pipeline params tree.
+
+    Stage leaves lead with the ``pipe`` axis (the stacked stage dim); under
+    ``policy.explicit_tp`` the projection/norm leaves additionally carry
+    their model-axis TP sharding (mirroring the fused TP sublayer's specs).
+    pre/post leaves stay replicated.
+    """
+    from repro.sharding import Partitioned
+
+    explicit = policy is not None and getattr(policy, "explicit_tp", False)
+    col = Partitioned("pipe", None, None, "model")
+    row = Partitioned("pipe", None, "model", None)
+    vec = Partitioned("pipe", None, "model")
+    tp_table = {"wq": col, "wk": col, "wv": col, "wo": row,
+                "w_up": col, "w_gate": col, "w_down": row,
+                "norm_mixer": vec, "norm_ffn": vec}
+
+    def stage_part(path, leaf):
+        del leaf
+        name = getattr(path[-1], "key", None)
+        if explicit and name in tp_table:
+            return tp_table[name]
+        return Partitioned("pipe")
+
+    rep = lambda tree: jax.tree_util.tree_map(lambda _: Partitioned(), tree)
+    return {
+        "pre": rep(pparams["pre"]),
+        "stage": jax.tree_util.tree_map_with_path(stage_part,
+                                                  pparams["stage"]),
+        "post": rep(pparams["post"]),
+    }
+
+
+def pipeline_fns(cfg, policy):
+    """(pre_fn, stage_fn, logits_fn) for the pipeline executor.
+
+    pre_fn embeds a token microbatch (and feature-shards the residual under
+    explicit TP — its parameter cotangent is then in contribution form over
+    the model axis, see pipeline_value_and_grad's ``pre_psum_axes``);
+    stage_fn applies this stage's superblocks; logits_fn gathers the
+    features back and applies final norm + head.
+    """
+    from repro.core import layers as L
+    from repro.core import primitives as prim
+
+    _check_pipelineable(cfg)
+    explicit = policy is not None and getattr(policy, "explicit_tp", False)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def pre_fn(p_pre, mb):
+        x = jnp.take(p_pre["embed"], mb["tokens"], axis=0).astype(dtype)
+        if explicit:
+            x = L.shard_slice(x, policy.model_axis, x.ndim - 1)
+        return x
+
+    def stage_fn(p_stage, x):
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        return pipeline_stage_body(p_stage, x, cfg, policy,
+                                   positions=positions)
+
+    def logits_fn(p_post, y):
+        if explicit:
+            # Replicated-adjoint gather: the epilogue loss is evaluated
+            # identically on every model rank and the scheduler seeds each
+            # rank's cotangent at 1, so the adjoint is the restriction to
+            # the rank's own feature block (DESIGN §4 cotangent convention).
+            y = prim.all_gather_replicated(y, policy.model_axis, y.ndim - 1)
+        x = rmsnorm(y, p_post["norm_final"])
+        return jnp.einsum("bsd,dv->bsv", x, p_post["lm_head"])
+
+    return pre_fn, stage_fn, logits_fn
 
 
 def init_cache(cfg, batch: int, max_seq: int, dtype=None):

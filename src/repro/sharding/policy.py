@@ -12,6 +12,8 @@ The production mesh is (pod, data, model) (launch/mesh.py).  Logical axes:
                                    gather is the paper's broadcast B, the
                                    gradient reduce-scatter its adjoint R
   kvdim   -> model                decode KV-cache head_dim sharding
+  pipe    -> pipe_axis            pipeline stages (stacked stage-param dim;
+                                   StageBoundary movement, core/pipeline.py)
 
 Activations are constrained (``constrain``) at block boundaries; parameters
 get specs from ``param_spec`` rules.  On a 1-device mesh every spec
@@ -30,9 +32,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 @dataclass(frozen=True)
 class Policy:
     mesh: Mesh
-    data_axis: str = "data"
-    model_axis: str = "model"
+    data_axis: str | None = "data"       # None: no DP axis (batch replicated)
+    model_axis: str | None = "model"     # None: no TP axis (model-logical
+                                         # axes resolve replicated)
     pod_axis: str | None = None          # set on the multi-pod mesh
+    pipe_axis: str | None = None         # pipeline-parallel stage axis
+                                         # (core/pipeline.py; logical "pipe")
     fsdp: bool = True                    # ZeRO-3 param sharding over data
     fsdp_over_pod: bool = False          # also shard params over pod axis
     seq_shard: bool = True               # SP: residuals sharded over model
@@ -51,8 +56,19 @@ class Policy:
         shims): logical names resolve only through mesh axis names and
         explicit ``bind`` aliases."""
         names = tuple(mesh.axis_names)
-        kw.setdefault("data_axis", names[0])
-        kw.setdefault("model_axis", names[-1])
+        if "pipe" in names:
+            # Pipeline mesh: never alias data/model onto the pipe axis, and
+            # with a single non-pipe axis there is NO data axis — "batch"
+            # must resolve replicated, not onto the TP axis.
+            non_pipe = tuple(n for n in names if n != "pipe")
+            kw.setdefault("pipe_axis", "pipe")
+            kw.setdefault("model_axis", non_pipe[-1] if non_pipe else None)
+            kw.setdefault("data_axis",
+                          non_pipe[0] if len(non_pipe) > 1 else None)
+        else:
+            kw.setdefault("pipe_axis", None)
+            kw.setdefault("data_axis", names[0])
+            kw.setdefault("model_axis", names[-1])
         kw.setdefault("fsdp", False)
         kw.setdefault("seq_shard", False)
         return cls(mesh, **kw)
@@ -101,6 +117,11 @@ class Policy:
         if logical in ("heads", "ff", "experts", "vocab", "kvdim", "kvseq",
                        "model"):
             return self.model_axis
+        if logical in ("pipe", "stage"):
+            # Pipeline stage axis (stacked stage-param dim / StageBoundary
+            # movement).  None (no pipe axis) degenerates to replication —
+            # a single-stage pipeline.
+            return self.pipe_axis
         if logical == "fsdp":
             if not self.fsdp:
                 return None
@@ -123,11 +144,15 @@ class Policy:
 
     @property
     def model_size(self) -> int:
-        return self.axis_size(self.model_axis)
+        return self.axis_size(self.model_axis) if self.model_axis else 1
+
+    @property
+    def pipe_size(self) -> int:
+        return self.axis_size(self.pipe_axis) if self.pipe_axis else 1
 
     @property
     def dp_size(self) -> int:
-        n = self.axis_size(self.data_axis)
+        n = self.axis_size(self.data_axis) if self.data_axis else 1
         if self.pod_axis:
             n *= self.axis_size(self.pod_axis)
         return n

@@ -1,2 +1,8 @@
 from .loop import LoopConfig, StragglerMonitor, restart_on_failure, run  # noqa: F401
-from .step import build_loss_fn, build_train_step, cross_entropy, init_train_state  # noqa: F401
+from .step import (  # noqa: F401
+    build_loss_fn,
+    build_pipeline_train_step,
+    build_train_step,
+    cross_entropy,
+    init_train_state,
+)

@@ -68,8 +68,12 @@ def run(state, train_step, data_iter, loop_cfg: LoopConfig, *, logger=print):
         rec.update(step=step, sec=dt, slow=slow)
         history.append(rec)
         if step % loop_cfg.log_every == 0 or slow:
+            extra = ""
+            if "bubble_fraction" in rec:
+                # pipeline-parallel steps report their schedule's bubble
+                extra = f"  bubble {rec['bubble_fraction']:.2f}"
             logger(f"step {step:5d}  loss {rec['loss']:.4f}  "
-                   f"gnorm {rec['grad_norm']:.3f}  {dt*1e3:.0f} ms"
+                   f"gnorm {rec['grad_norm']:.3f}  {dt*1e3:.0f} ms" + extra
                    + ("  [STRAGGLER]" if slow else ""))
         if (loop_cfg.ckpt_dir and loop_cfg.ckpt_every
                 and (step + 1) % loop_cfg.ckpt_every == 0):

@@ -11,6 +11,11 @@ function ready for jit with in/out shardings:
   reduction — the cross-pod wire-format lever;
 - global-norm clipping, then the optimizer update (optimizer state shares
   the parameter shardings = ZeRO via FSDP specs).
+
+``build_pipeline_train_step`` is the pipeline-parallel sibling: loss and
+grads come from the scheduled 1F1B / fill-drain executor in
+``core/pipeline.py`` (microbatch accumulation lives inside the schedule),
+followed by the same clip + update.
 """
 
 from __future__ import annotations
@@ -95,6 +100,70 @@ def build_train_step(cfg, policy, optimizer, *, aux_weight: float = 0.01,
         new_state = {"params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}
         metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def build_pipeline_train_step(cfg, policy, optimizer, *,
+                              num_microbatches: int, schedule: str = "1f1b",
+                              max_grad_norm: float = 1.0):
+    """Train step over a pipeline-parallel model cut (core/pipeline.py).
+
+    The loss and gradients come from the scheduled SPMD pipeline executor
+    (fill-drain or 1F1B) running in ONE shard_map over ``policy.mesh``'s
+    (pipe, model) axes; microbatch loss/grad accumulation happens INSIDE the
+    schedule (each backward slot accumulates into the stage's gradient
+    ring), so ``cfg.grad_accum`` is subsumed by ``num_microbatches``.  The
+    state's params follow the {'pre', 'stage', 'post'} pipeline layout
+    (``models.init_pipeline_params``).  Clip + optimizer update match
+    ``build_train_step``; metrics additionally carry the schedule's static
+    bubble fraction.  Wrap in jax.jit like ``build_train_step``.
+    """
+    from repro.core.pipeline import make_schedule, pipeline_value_and_grad
+    from repro.models.model import (init_pipeline_params, pipeline_fns,
+                                    pipeline_param_parts)
+    from repro.sharding import Partitioned
+
+    sched = make_schedule(schedule, num_microbatches, policy.pipe_size)
+    pre_fn, stage_fn, logits_fn = pipeline_fns(cfg, policy)
+
+    def post_fn(p_post, y, labels):
+        loss, _ = cross_entropy(logits_fn(p_post, y), labels)
+        return loss
+
+    pspecs = jax.eval_shape(
+        lambda k: init_pipeline_params(cfg, k, policy.pipe_size),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    parts = pipeline_param_parts(cfg, policy, pspecs)
+    explicit = getattr(policy, "explicit_tp", False)
+    pvg = pipeline_value_and_grad(
+        pre_fn, stage_fn, post_fn, policy, sched,
+        params_parts=parts,
+        x_parts={"tokens": Partitioned()},
+        y_parts=Partitioned(),
+        pre_psum_axes=(policy.model_axis,) if explicit else (),
+        jit=False)
+    bubble = sched.bubble_fraction()
+
+    def train_step(state, batch):
+        params = state["params"]
+        M = num_microbatches
+        if batch["tokens"].shape[0] % M:
+            raise ValueError(
+                f"global batch {batch['tokens'].shape[0]} not divisible by "
+                f"num_microbatches={M}")
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
+        loss, grads = pvg(params, {"tokens": mbs["tokens"]}, mbs["labels"])
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-12))
+        new_params, new_opt = optimizer.update(grads, state["opt"], params,
+                                               scale=scale)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "bubble_fraction": jnp.asarray(bubble, jnp.float32)}
         return new_state, metrics
 
     return train_step

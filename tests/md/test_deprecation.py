@@ -1,0 +1,95 @@
+"""The seed-era ``dist_*`` layer shims: deprecated but numerically intact.
+
+Each shim must (a) emit ``DeprecationWarning`` pointing at the dist_jit
+migration (README.md) and (b) match the modern path — the same context-aware
+layer function composed through ``dist_jit`` with explicit ``Partitioned``
+declarations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layers as L
+from repro.core.compile import dist_jit
+from repro.sharding import Partitioned, Policy
+
+
+def _r(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestShimsWarnAndMatchDistJit:
+    def test_dist_affine(self, mesh8):
+        x, w, b = _r((8, 16), 0), _r((12, 16), 1), _r((12,), 2)
+        with pytest.warns(DeprecationWarning, match="dist_affine"):
+            y_shim = L.dist_affine(mesh8, x, w, b, fo_axis="data",
+                                   fi_axis="model", batch_axis=None)
+        modern = dist_jit(
+            lambda xx, ww, bb: L.affine(xx, ww, bb, fo_axis="data",
+                                        fi_axis="model"),
+            Policy.for_mesh(mesh8),
+            (Partitioned(None, "model"), Partitioned("data", "model"),
+             Partitioned("data")),
+            Partitioned(None, "data"))
+        np.testing.assert_allclose(np.asarray(y_shim),
+                                   np.asarray(modern(x, w, b)),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_dist_conv1d_causal(self, mesh8):
+        x, w = _r((4, 16, 6), 3), _r((3, 6), 4)
+        with pytest.warns(DeprecationWarning, match="dist_conv1d_causal"):
+            y_shim = L.dist_conv1d_causal(mesh8, x, w, seq_axis="model",
+                                          batch_axis="data")
+        modern = dist_jit(
+            lambda xx, ww: L.conv1d_causal(xx, ww, seq_axis="model"),
+            Policy.for_mesh(mesh8),
+            (Partitioned("data", "model", None), Partitioned(None, None)),
+            Partitioned("data", "model", None))
+        np.testing.assert_allclose(np.asarray(y_shim),
+                                   np.asarray(modern(x, w)),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_dist_conv_same(self, mesh8):
+        x, w = _r((2, 3, 16), 5), _r((4, 3, 3), 6)
+        with pytest.warns(DeprecationWarning, match="dist_conv_same"):
+            y_shim = L.dist_conv_same(mesh8, x, w, spatial_axes=("model",))
+        modern = dist_jit(
+            lambda xx, ww: L.conv_same(xx, ww, spatial_axes=("model",)),
+            Policy.for_mesh(mesh8),
+            (Partitioned(None, None, "model"),
+             Partitioned(None, None, None)),
+            Partitioned(None, None, "model"))
+        np.testing.assert_allclose(np.asarray(y_shim),
+                                   np.asarray(modern(x, w)),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_dist_pool(self, mesh8):
+        x = _r((2, 3, 16), 7)
+        with pytest.warns(DeprecationWarning, match="dist_pool"):
+            y_shim = L.dist_pool(mesh8, x, k=2, stride=2,
+                                 spatial_axes=("model",))
+        modern = dist_jit(
+            lambda xx: L.pool(xx, k=2, stride=2, spatial_axes=("model",)),
+            Policy.for_mesh(mesh8),
+            Partitioned(None, None, "model"),
+            Partitioned(None, None, "model"))
+        np.testing.assert_allclose(np.asarray(y_shim),
+                                   np.asarray(modern(x)),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_dist_embedding(self, mesh8):
+        ids = jax.random.randint(jax.random.PRNGKey(8), (6,), 0, 32)
+        table = _r((32, 8), 9)
+        with pytest.warns(DeprecationWarning, match="dist_embedding"):
+            y_shim = L.dist_embedding(mesh8, ids, table, vocab_axis="model",
+                                      batch_axis="data")
+        modern = dist_jit(
+            lambda ii, tt: L.embedding(ii, tt, vocab_axis="model"),
+            Policy.for_mesh(mesh8),
+            (Partitioned("data"), Partitioned("model", None)),
+            Partitioned("data", None))
+        np.testing.assert_allclose(np.asarray(y_shim),
+                                   np.asarray(modern(ids, table)),
+                                   rtol=1e-6, atol=1e-6)

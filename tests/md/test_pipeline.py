@@ -1,0 +1,187 @@
+"""Pipeline parallelism on 8 real devices (core/pipeline.py).
+
+Covers the PR's acceptance bar: the StageBoundary operator passes the
+generic Eq. 13 adjoint check on the pipe axis of a pipe x tensor 2-D mesh,
+and a 1F1B-scheduled 4-stage x 2-TP pipeline matches the single-device fp32
+reference in forward loss AND parameter gradients — plus the edge cases
+(microbatch count not divisible by stage count, degenerate single-stage
+pipeline, fill-drain/1F1B agreement) and the train-step integration.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.configs import ModelConfig
+from repro.core.linop import AllGather, SumReduce, check_adjoint
+from repro.core.pipeline import (StageBoundary, make_schedule,
+                                 pipeline_value_and_grad)
+from repro.models import (forward, from_pipeline_params, init_pipeline_params,
+                          pipeline_fns, pipeline_param_parts,
+                          to_pipeline_params)
+from repro.sharding import Partitioned, Policy
+from repro.train import cross_entropy
+
+CFG = ModelConfig(name="pp_test", family="dense", num_layers=4, d_model=64,
+                  num_heads=8, num_kv_heads=4, head_dim=8, d_ff=128,
+                  vocab_size=128, dtype="float32", remat=False, attn_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def mesh4x2():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    return compat.make_mesh((4, 2), ("pipe", "model"))
+
+
+class TestStageBoundaryAdjoint:
+    """Eq. 13 on the pipe axis of the 2-D mesh (paper §3 send/receive)."""
+
+    def test_adjoint_identity(self):
+        assert StageBoundary("pipe").T == StageBoundary("pipe", -1)
+        assert StageBoundary("pipe", 2).T.T == StageBoundary("pipe", 2)
+
+    @pytest.mark.parametrize("offset", [1, -1, 2])
+    def test_eq13_on_pipe_axis(self, mesh4x2, offset):
+        r = check_adjoint(StageBoundary("pipe", offset), mesh4x2, (8, 6))
+        assert r.passed, r
+
+    def test_eq13_both_axes_of_2d_mesh(self, mesh4x2):
+        """Pipe x tensor composition: the pipe-axis boundary AND the
+        model-axis TP collectives each keep exact adjoints on the same 2-D
+        mesh (the executor runs both inside one region)."""
+        assert check_adjoint(StageBoundary("pipe"), mesh4x2, (8, 6)).passed
+        assert check_adjoint(AllGather("model", 1), mesh4x2, (8, 6)).passed
+        assert check_adjoint(SumReduce("model"), mesh4x2, (8, 6)).passed
+
+    def test_eq13_pipe_axis_composite(self, mesh4x2):
+        """Composites along the pipe axis obey the §2 reversal law both
+        structurally and numerically (Eq. 13)."""
+        comp = StageBoundary("pipe") @ StageBoundary("pipe")
+        assert comp.T == StageBoundary("pipe", -1) @ StageBoundary("pipe", -1)
+        assert check_adjoint(comp, mesh4x2, (8, 6)).passed
+        # mixed-axis reversal holds structurally
+        mixed = StageBoundary("pipe") @ AllGather("model", 1)
+        assert mixed.T == AllGather("model", 1).T @ StageBoundary("pipe", -1)
+
+
+def _data(M, B, L, seed=1):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (B, L), 0, CFG.vocab_size)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (B, L), 0,
+                                CFG.vocab_size)
+    return ({"tokens": tokens.reshape(M, B // M, L)},
+            labels.reshape(M, B // M, L))
+
+
+def _pipeline_loss_and_grads(mesh, schedule_name, M, *, explicit_tp=True):
+    S = mesh.devices.shape[0]
+    pol = Policy.for_mesh(mesh, explicit_tp=explicit_tp)
+    pparams = init_pipeline_params(CFG, jax.random.PRNGKey(0), S)
+    xs, ys = _data(M, 2 * M, 16)
+    pre_fn, stage_fn, logits_fn = pipeline_fns(CFG, pol)
+
+    def post_fn(p_post, y, labels):
+        return cross_entropy(logits_fn(p_post, y), labels)[0]
+
+    f = pipeline_value_and_grad(
+        pre_fn, stage_fn, post_fn, pol, make_schedule(schedule_name, M, S),
+        params_parts=pipeline_param_parts(CFG, pol, pparams),
+        x_parts={"tokens": Partitioned()}, y_parts=Partitioned(),
+        pre_psum_axes=(pol.model_axis,) if explicit_tp else ())
+    loss, grads = f(pparams, xs, ys)
+    return pparams, xs, ys, loss, grads
+
+
+def _reference_loss_and_grads(pparams, xs, ys):
+    """Single-device fp32 reference: per-microbatch forward + AD."""
+    dense = from_pipeline_params(pparams)
+    M = ys.shape[0]
+
+    def ref_loss(p):
+        tot = 0.0
+        for m in range(M):
+            logits, _, _ = forward(p, {"tokens": xs["tokens"][m]}, CFG, None,
+                                   mode="train")
+            tot = tot + cross_entropy(logits, ys[m])[0]
+        return tot / M
+
+    return jax.value_and_grad(ref_loss)(dense)
+
+
+def _assert_matches_reference(pparams, xs, ys, loss, grads):
+    ref_loss, ref_grads = _reference_loss_and_grads(pparams, xs, ys)
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=2e-5)
+    got = dict(jax.tree_util.tree_leaves_with_path(
+        from_pipeline_params(grads)))
+    for path, ref in jax.tree_util.tree_leaves_with_path(ref_grads):
+        np.testing.assert_allclose(np.asarray(got[path]), np.asarray(ref),
+                                   rtol=5e-4, atol=5e-4, err_msg=str(path))
+
+
+class TestPipelineMatchesReference:
+    def test_1f1b_4stage_2tp(self, mesh4x2):
+        """The acceptance criterion: 1F1B, 4 stages x 2-way TP, vs fp32
+        single-device loss and parameter gradients."""
+        _assert_matches_reference(
+            *_pipeline_loss_and_grads(mesh4x2, "1f1b", M=4))
+
+    def test_fill_drain_4stage_2tp(self, mesh4x2):
+        _assert_matches_reference(
+            *_pipeline_loss_and_grads(mesh4x2, "fill_drain", M=4))
+
+    def test_microbatches_not_divisible_by_stages(self, mesh4x2):
+        """M=6 over S=4: ragged fill/drain phases still schedule exactly."""
+        _assert_matches_reference(
+            *_pipeline_loss_and_grads(mesh4x2, "1f1b", M=6))
+
+    def test_single_stage_degenerate(self):
+        """S=1 collapses the pipe to pure TP; the boundary moves nothing."""
+        if len(jax.devices()) < 2:
+            pytest.skip("needs 2 host devices")
+        mesh = compat.make_mesh((1, 2), ("pipe", "model"))
+        _assert_matches_reference(
+            *_pipeline_loss_and_grads(mesh, "1f1b", M=3))
+
+
+class TestPipelineTrainStep:
+    def test_train_step_runs_and_reports_bubble(self, mesh4x2):
+        from repro.optim import make_optimizer
+        from repro.train import build_pipeline_train_step, init_train_state
+
+        pol = Policy.for_mesh(mesh4x2, explicit_tp=True)
+        opt = make_optimizer("adamw", total_steps=10)
+        step = jax.jit(build_pipeline_train_step(
+            CFG, pol, opt, num_microbatches=4))
+        params = init_pipeline_params(CFG, jax.random.PRNGKey(0),
+                                      pol.pipe_size)
+        state = init_train_state(CFG, params, opt)
+        key = jax.random.PRNGKey(3)
+        batch = {"tokens": jax.random.randint(key, (8, 16), 0, 128),
+                 "labels": jax.random.randint(key, (8, 16), 0, 128)}
+        state, metrics = step(state, batch)
+        assert int(state["step"]) == 1
+        assert np.isfinite(float(metrics["loss"]))
+        # M=4, S=4: bubble = (S-1)/(M+S-1) per phase = 3/7
+        np.testing.assert_allclose(float(metrics["bubble_fraction"]), 3 / 7,
+                                   atol=1e-6)
+
+    def test_param_cut_roundtrip(self):
+        params = jax.eval_shape(
+            lambda k: init_pipeline_params(CFG, k, 4),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        assert params["stage"]["pos0"]["attn"]["wq"].shape[:2] == (4, 1)
+        cut = to_pipeline_params(
+            CFG, {"embed": jnp.zeros((128, 64)),
+                  "norm_final": jnp.zeros((64,)),
+                  "lm_head": jnp.zeros((64, 128)),
+                  "blocks": {"pos0": {"norm_mixer": jnp.zeros((4, 64))}}}, 2)
+        assert cut["stage"]["pos0"]["norm_mixer"].shape == (2, 2, 64)
+        back = from_pipeline_params(cut)
+        assert back["blocks"]["pos0"]["norm_mixer"].shape == (4, 64)
+
+    def test_uneven_stage_cut_raises(self):
+        with pytest.raises(ValueError, match="uniformly"):
+            init_pipeline_params(CFG, jax.random.PRNGKey(0), 3)

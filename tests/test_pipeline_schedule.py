@@ -1,0 +1,182 @@
+"""Pure-Python properties of the pipeline microbatch schedules.
+
+Device-free tier-1 checks of core/pipeline.py's schedule generators: slot
+counts, dependency (dataflow) ordering, the closed-form bubble fraction,
+and the 1F1B memory claim (activation ring depth min(S, M) vs fill-drain's
+M).  The numerical executor itself is exercised on the 8-device mesh in
+tests/md/test_pipeline.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (make_schedule, schedule_1f1b,
+                                 schedule_fill_drain)
+
+CASES = [(1, 1), (3, 1), (2, 4), (4, 4), (6, 4), (8, 4), (5, 3), (12, 8)]
+
+
+@pytest.mark.parametrize("M,S", CASES)
+@pytest.mark.parametrize("gen", [schedule_fill_drain, schedule_1f1b])
+def test_every_microbatch_scheduled_once(gen, M, S):
+    s = gen(M, S)
+    fwd, bwd, idle = s.counts()
+    assert fwd == M * S and bwd == M * S
+    assert fwd + bwd + idle == s.num_ticks * S
+    for st in range(S):
+        for op in (1, 2):
+            mbs = s.mbs[:, st][s.ops[:, st] == op]
+            assert sorted(mbs.tolist()) == list(range(M))
+
+
+@pytest.mark.parametrize("M,S", CASES)
+@pytest.mark.parametrize("gen", [schedule_fill_drain, schedule_1f1b])
+def test_dataflow_ordering(gen, M, S):
+    """F_s(m) strictly after F_{s-1}(m); B_s(m) strictly after B_{s+1}(m)
+    (and after F at the last stage) — data crosses a boundary per tick."""
+    s = gen(M, S)
+    t_f = np.full((S, M), -1)
+    t_b = np.full((S, M), -1)
+    for t in range(s.num_ticks):
+        for st in range(S):
+            if s.ops[t, st] == 1:
+                t_f[st, s.mbs[t, st]] = t
+            elif s.ops[t, st] == 2:
+                t_b[st, s.mbs[t, st]] = t
+    for m in range(M):
+        for st in range(1, S):
+            assert t_f[st, m] > t_f[st - 1, m]
+        for st in range(S - 1):
+            assert t_b[st, m] > t_b[st + 1, m]
+        assert t_b[S - 1, m] > t_f[S - 1, m]
+
+
+@pytest.mark.parametrize("M,S", CASES)
+def test_bubble_fraction_closed_form(M, S):
+    """Both schedules realize the ideal (S-1)/(M+S-1) bubble under equal
+    F/B slot cost: total ticks 2(M+S-1), busy slots 2MS."""
+    for gen in (schedule_fill_drain, schedule_1f1b):
+        s = gen(M, S)
+        assert s.num_ticks == 2 * (M + S - 1)
+        np.testing.assert_allclose(s.bubble_fraction(),
+                                   (S - 1) / (M + S - 1), atol=1e-9)
+
+
+@pytest.mark.parametrize("M,S", CASES)
+def test_1f1b_memory_win(M, S):
+    """1F1B's whole point: the activation ring holds min(S, M) microbatches
+    in flight, fill-drain holds all M."""
+    fd, ofob = schedule_fill_drain(M, S), schedule_1f1b(M, S)
+    assert fd.fwd_depth == M
+    assert ofob.fwd_depth == min(S, M)
+    assert ofob.fwd_depth <= fd.fwd_depth
+
+
+def test_recv_tables_mirror_ops():
+    s = schedule_1f1b(6, 4)
+    for t in range(s.num_ticks):
+        for st in range(s.num_stages):
+            if st > 0:
+                expect = (s.mbs[t, st - 1] if s.ops[t, st - 1] == 1 else -1)
+                assert s.recv_f[t, st] == expect
+            else:
+                assert s.recv_f[t, st] == -1
+            if st < s.num_stages - 1:
+                expect = (s.mbs[t, st + 1] if s.ops[t, st + 1] == 2 else -1)
+                assert s.recv_b[t, st] == expect
+            else:
+                assert s.recv_b[t, st] == -1
+
+
+def test_make_schedule_validates():
+    assert make_schedule("1f1b", 4, 2).name == "1f1b"
+    assert make_schedule("fill_drain", 4, 2).name == "fill_drain"
+    with pytest.raises(ValueError, match="unknown schedule"):
+        make_schedule("zero-bubble", 4, 2)
+    with pytest.raises(ValueError, match="M >= 1"):
+        schedule_1f1b(0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Launch-side pipeline helpers (launch/specs.py, launch/mesh.py).
+# ---------------------------------------------------------------------------
+
+def _cfg(num_layers=4):
+    from repro.configs import ModelConfig
+
+    return ModelConfig(name="sched_test", family="dense",
+                       num_layers=num_layers, d_model=64, num_heads=8,
+                       num_kv_heads=4, head_dim=8, d_ff=128, vocab_size=128,
+                       dtype="float32", remat=False, attn_chunk=16)
+
+
+def test_stage_assignment_contiguous_cover():
+    from repro.launch.specs import stage_assignment
+
+    cfg = _cfg(num_layers=4)
+    ranges = stage_assignment(cfg, 4)
+    assert [list(r) for r in ranges] == [[0], [1], [2], [3]]
+    # non-uniform cuts are reported (ceil-first)...
+    ranges = stage_assignment(cfg, 3)
+    assert [len(r) for r in ranges] == [2, 1, 1]
+    assert sorted(sum(([*r] for r in ranges), [])) == list(range(4))
+    # ...and the SPMD executor's param cut rejects exactly those
+    from repro.models import init_pipeline_params
+    import jax
+
+    with pytest.raises(ValueError, match="uniformly"):
+        init_pipeline_params(cfg, jax.random.PRNGKey(0), 3)
+
+
+def test_pipeline_input_specs_microbatched():
+    from repro.configs import SHAPES
+    from repro.launch.specs import pipeline_input_specs
+
+    cfg = _cfg()
+    xs, labels = pipeline_input_specs(cfg, "train_4k", num_microbatches=8)
+    cell = SHAPES["train_4k"]
+    mb = cell.global_batch // 8
+    assert xs["tokens"].shape == (8, mb, cell.seq_len)
+    assert labels.shape == (8, mb, cell.seq_len)
+    with pytest.raises(ValueError, match="not divisible"):
+        pipeline_input_specs(cfg, "train_4k", num_microbatches=7)
+    with pytest.raises(ValueError, match="train cell"):
+        pipeline_input_specs(cfg, "decode_32k", num_microbatches=2)
+
+
+def test_moe_configs_rejected():
+    """The pipeline cut must refuse MoE rather than silently dropping the
+    load-balance auxiliary loss (which build_train_step applies)."""
+    import dataclasses
+
+    from repro.models import pipeline_fns
+
+    cfg = dataclasses.replace(_cfg(), num_experts=4, experts_per_token=2,
+                              moe_d_ff=64)
+    with pytest.raises(NotImplementedError, match="auxiliary"):
+        pipeline_fns(cfg, None)
+
+
+def test_make_pipeline_mesh_binds_policy():
+    from repro.launch.mesh import make_pipeline_mesh
+    from repro.sharding import Policy
+
+    mesh = make_pipeline_mesh(1, 1)  # single-device degenerate pipe
+    pol = Policy.for_mesh(mesh)
+    assert pol.pipe_axis == "pipe" and pol.pipe_size == 1
+    assert pol.model_axis == "model"
+    # a (pipe, model) mesh has NO data axis: "batch" resolves replicated
+    # instead of aliasing onto the TP axis, and dp_size is 1
+    assert pol.data_axis is None
+    assert pol.resolve_axis("batch") is None
+    assert pol.dp_size == 1
+
+    # pipe-ONLY mesh: model-logical axes must resolve replicated, never
+    # alias onto the stage axis StageBoundary shifts along
+    from repro import compat
+
+    pol1 = Policy.for_mesh(compat.make_mesh((1,), ("pipe",)))
+    assert pol1.pipe_axis == "pipe"
+    assert pol1.model_axis is None and pol1.data_axis is None
+    assert pol1.resolve_axis("heads") is None
+    assert pol1.model_size == 1 and pol1.dp_size == 1

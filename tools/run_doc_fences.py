@@ -1,0 +1,66 @@
+"""Execute fenced ``python`` code blocks from markdown docs.
+
+CI's docs job runs this over README.md / DESIGN.md so the documented
+snippets can never drift from the code: every \`\`\`python fence is executed
+top-to-bottom in a namespace SHARED per file (later fences may use names
+from earlier ones), and any exception fails the build.  Non-python fences
+(\`\`\`text, \`\`\`bash, ...) are ignored.
+
+Usage:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python tools/run_doc_fences.py README.md DESIGN.md
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
+
+
+def extract(path: str) -> list[tuple[int, str]]:
+    """(starting line number, source) for every \`\`\`python fence."""
+    text = open(path).read()
+    blocks = []
+    for m in FENCE.finditer(text):
+        line = text[: m.start()].count("\n") + 2  # first line inside fence
+        blocks.append((line, m.group(1)))
+    return blocks
+
+
+def run_file(path: str) -> int:
+    blocks = extract(path)
+    ns: dict = {"__name__": f"docfence:{path}"}
+    for line, src in blocks:
+        try:
+            code = compile(src, f"{path}:{line}", "exec")
+            exec(code, ns)  # noqa: S102 — executing our own docs is the job
+        except Exception:
+            import traceback
+
+            traceback.print_exc()
+            print(f"FAIL {path}:{line}", file=sys.stderr)
+            return 1
+        print(f"ok   {path}:{line}")
+    print(f"{path}: {len(blocks)} python fence(s) executed")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: run_doc_fences.py FILE.md [FILE.md ...]",
+              file=sys.stderr)
+        return 2
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    rc = 0
+    for path in argv:
+        rc |= run_file(path)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
