@@ -9,6 +9,8 @@
   layer_micro      distributed layer microbenchmarks (us/call)
   pipeline_schedules  fill-drain vs 1F1B: us/step, bubble fraction,
                    activation ring depth (4-stage x 2-TP pipeline)
+  hybrid_3d        (dp, S, tp) factorizations of 8 devices under the
+                   hybrid DP x pipe x tensor executor (fp32-equal losses)
   train_micro      end-to-end small-LM train-step timing (us/step)
 
 Prints ``name,us_per_call,derived`` CSV.  Run:
@@ -320,6 +322,53 @@ def bench_pipeline_schedules():
     assert abs(losses["fill_drain"] - losses["1f1b"]) < 1e-5, losses
 
 
+def bench_hybrid_3d():
+    """(dp, S, tp) factorizations of the 8-device host under the hybrid
+    3-D executor (DESIGN §5): one fixed model + global batch, every mesh
+    factorization sweeps a different DP/pipe/TP mix.  Reports us/step and
+    the schedule's static bubble; all factorizations are asserted
+    fp32-equal in first-step loss first (the algebra's promise: the mesh
+    factorization changes the movement plan, not the mathematics).
+    """
+    from repro.configs import ModelConfig
+    from repro.core.pipeline import make_schedule
+    from repro.launch.mesh import make_hybrid_mesh
+    from repro.models import init_pipeline_params
+    from repro.optim import make_optimizer
+    from repro.sharding import Policy
+    from repro.train import build_hybrid_train_step, init_train_state
+
+    cfg = ModelConfig(name="hy_micro", family="dense", num_layers=4,
+                      d_model=128, num_heads=8, num_kv_heads=4, head_dim=16,
+                      d_ff=256, vocab_size=1024, dtype="float32",
+                      remat=False, attn_chunk=64)
+    M, B, S = 4, 16, 64
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.fold_in(key, 1),
+                                          (B, S), 0, cfg.vocab_size)}
+    opt = make_optimizer("adamw", total_steps=100)
+
+    losses = {}
+    for dp, stages, tp in ((1, 4, 2), (2, 2, 2), (4, 2, 1), (2, 1, 4)):
+        pol = Policy.for_mesh(make_hybrid_mesh(dp, stages, tp),
+                              explicit_tp=tp > 1)
+        sched = make_schedule("1f1b", M, stages)
+        step = jax.jit(build_hybrid_train_step(
+            cfg, pol, opt, num_microbatches=M, schedule="1f1b"))
+        params = init_pipeline_params(cfg, jax.random.PRNGKey(1), stages)
+        state = init_train_state(cfg, params, opt)
+        _, metrics = step(state, batch)           # compile
+        name = f"{dp}x{stages}x{tp}"
+        losses[name] = float(metrics["loss"])
+        us = timeit(lambda: step(state, batch)[1]["loss"], iters=5, warmup=1)
+        emit(f"hybrid_3d/dp{dp}_pp{stages}_tp{tp}", us,
+             f"bubble={sched.bubble_fraction():.3f};"
+             f"loss={losses[name]:.4f}")
+    ref = next(iter(losses.values()))
+    assert all(abs(v - ref) < 1e-4 for v in losses.values()), losses
+
+
 def bench_train_micro():
     from repro.configs import ModelConfig
     from repro.data import DataConfig, SyntheticLM
@@ -357,6 +406,7 @@ BENCHES = {
     "layer_micro": bench_layer_micro,
     "fused_vs_unfused": bench_fused_vs_unfused,
     "pipeline_schedules": bench_pipeline_schedules,
+    "hybrid_3d": bench_hybrid_3d,
     "train_micro": bench_train_micro,
 }
 

@@ -12,6 +12,11 @@ When ``policy.explicit_tp`` is set, the gather/scatter affine forms inside
 the region select the ring collective-matmuls from ``core/overlap.py``, so
 ICI transfers overlap MXU work across the whole fused body (forward AND
 backward — the rings differentiate to the matching reverse rings).
+
+The region is mesh-rank-agnostic: the same mechanism hosts a 2-D
+(data, model) block, the (pipe, model) pipeline executor, and the hybrid
+3-D (data, pipe, model) step (DESIGN §5) — boundary ``Partitioned`` specs
+name logical axes, so one body serves every mesh factorization.
 """
 
 from __future__ import annotations

@@ -66,6 +66,8 @@ __all__ = [
     "ReduceScatter",
     "AllToAll",
     "SendRecv",
+    "BatchScatter",
+    "GradSumReduce",
     "HaloExchange",
     "HaloAccumulate",
     "Compose",
@@ -308,6 +310,55 @@ class SendRecv(LinearOp):
 
     def out_spec(self, rank):
         return _axis_at(self.axis, 0, rank)
+
+
+@dataclass(frozen=True)
+class BatchScatter(LinearOp):
+    """S: per-replica batch distribution over the ``data`` axis (paper
+    Eq. 8-9 block-wise on the batch; DESIGN §5).  Restricts a replicated
+    batch to this replica's own block along ``dim``.  Adjoint:
+    ``GradSumReduce(axis, dim)`` — cotangent blocks return to their global
+    batch slots and the replica contributions sum (Eq. 9).  Lifted globally
+    both are the identity on F^B: the data axis moves no batch bytes; its
+    cost is the parameter-path B/R pair."""
+
+    axis: str
+    dim: int = 0
+
+    def __call__(self, x):
+        return prim.batch_scatter(x, self.axis, self.dim)
+
+    def _adjoint(self):
+        return GradSumReduce(self.axis, self.dim)
+
+    def in_spec(self, rank):
+        return P()
+
+    def out_spec(self, rank):
+        return _axis_at(self.axis, self.dim, rank)
+
+
+@dataclass(frozen=True)
+class GradSumReduce(LinearOp):
+    """S* (DESIGN §5): sum slot-embedded per-replica contributions back into
+    the global batch — batch_scatter's Eq. 9 adjoint.  The result is the
+    full global-dim tensor, replicated over ``axis``.  Adjoint:
+    ``BatchScatter(axis, dim)`` (S** = S)."""
+
+    axis: str
+    dim: int = 0
+
+    def __call__(self, y):
+        return prim.grad_sum_reduce(y, self.axis, self.dim)
+
+    def _adjoint(self):
+        return BatchScatter(self.axis, self.dim)
+
+    def in_spec(self, rank):
+        return _axis_at(self.axis, self.dim, rank)
+
+    def out_spec(self, rank):
+        return P()
 
 
 def _as_widths(w) -> Tuple[int, ...] | None:

@@ -21,7 +21,13 @@ the matching receive tables, produced by two generators:
   min(S, M) — the memory win that lets M grow (DESIGN §4).
 
 :func:`pipeline_value_and_grad` executes a schedule inside ONE ``dist_jit``
-region over the (pipe, model) mesh.  Following the paper, the backward pass
+region over the (pipe, model) — or hybrid (data, pipe, model) — mesh.
+When the policy carries a data axis, every replica runs the same schedule
+on its own per-replica microbatch shards (``BatchScatter``, realized by the
+region's in-boundary) and the cross-replica gradient sum-reduce — the
+parameter broadcast's Eq. 9 adjoint — sits at the tail of the backward
+drain inside the same region (DESIGN §5): all three of the paper's
+parallelism styles compose in one program.  Following the paper, the backward pass
 is NOT produced by differentiating the scheduler loop: each backward slot
 re-runs the stage body under ``jax.vjp`` at the saved stage input
 (rematerialized residuals) and the resulting cotangent crosses the stage
@@ -280,7 +286,12 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
       post_fn:  ``(params['post'], act, microbatch_y) -> scalar loss`` — the
                 last-stage-only epilogue (final norm, head, loss).
       policy:   ``sharding.Policy`` with ``pipe_axis`` set; supplies the
-                mesh and the model-axis bindings for TP inside stages.
+                mesh and the model-axis bindings for TP inside stages.  If
+                ``policy.data_axis`` is set (hybrid DP x pipe x tensor,
+                ``launch.make_hybrid_mesh``), microbatch inputs must be
+                sharded over it (``Partitioned(None, "data")`` on the
+                per-microbatch batch dim) and loss/grads are averaged over
+                replicas inside the region.
       schedule: a :class:`Schedule` (its stage count must equal the pipe
                 axis size).
       params_parts: pytree of ``Partitioned`` declarations matching a
@@ -307,6 +318,18 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
         raise ValueError(
             f"schedule has {S} stages but mesh axis {pipe_axis!r} has size "
             f"{policy.axis_size(pipe_axis)}")
+    # Hybrid DP x pipe x tensor (DESIGN §5): when the policy carries a data
+    # axis, each replica runs the SAME schedule on its own per-replica
+    # microbatch shards (the boundary specs realize BatchScatter — shard_map's
+    # in-restriction over the data axis IS the S operator) and the
+    # cross-replica gradient sum-reduce — the parameter-path B* of Eq. 9 —
+    # rides the end of the backward drain inside this one region: no second
+    # dispatch, no per-parameter allreduce pass.
+    # (Policy.active_data_axis: data_axis only when it names a live mesh
+    # axis — policies built off-mesh keep the default name; degenerate.)
+    data_axis = policy.active_data_axis
+    dp_axes = (data_axis,) if data_axis else ()
+    dp = policy.axis_size(data_axis) if data_axis else 1
     boundary = StageBoundary(pipe_axis)          # forward send
     boundary_T = boundary.T                      # adjoint: backward send
 
@@ -391,20 +414,26 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
 
         carry, _ = jax.lax.scan(tick, carry, (ops, mbs, recv_f, recv_b))
 
-        inv_m = 1.0 / M
+        inv_m = 1.0 / (M * dp)
         psum_tree = lambda tree, axes: jax.tree_util.tree_map(
             lambda g: jax.lax.psum(g, axes), tree)
         # Only the owning stage accumulated pre/post/loss; collect over pipe
-        # (plus any contribution-form model axes — DESIGN §2.1).
-        g_pre = psum_tree(carry["g_pre"], (pipe_axis,) + tuple(pre_psum_axes))
+        # (plus any contribution-form model axes — DESIGN §2.1).  With a data
+        # axis every reduction ALSO sums the per-replica contributions — the
+        # DP gradient sum-reduce (Broadcast* = SumReduce, Eq. 9), placed at
+        # the tail of the drain inside this same region (DESIGN §5).
+        g_pre = psum_tree(carry["g_pre"],
+                          (pipe_axis,) + dp_axes + tuple(pre_psum_axes))
         g_post = psum_tree(carry["g_post"],
-                           (pipe_axis,) + tuple(post_psum_axes))
-        loss = jax.lax.psum(carry["loss"], pipe_axis) * inv_m
+                           (pipe_axis,) + dp_axes + tuple(post_psum_axes))
+        g_stage = (psum_tree(carry["g_stage"], dp_axes) if dp_axes
+                   else carry["g_stage"])
+        loss = jax.lax.psum(carry["loss"], (pipe_axis,) + dp_axes) * inv_m
         scale = partial(jax.tree_util.tree_map, lambda g: g * inv_m)
         grads = {
             "pre": scale(g_pre),
             "stage": jax.tree_util.tree_map(
-                lambda g: jnp.expand_dims(g * inv_m, 0), carry["g_stage"]),
+                lambda g: jnp.expand_dims(g * inv_m, 0), g_stage),
             "post": scale(g_post),
         }
         return loss, grads

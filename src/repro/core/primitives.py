@@ -42,6 +42,8 @@ __all__ = [
     "reduce_scatter",
     "all_to_all",
     "send_recv",
+    "batch_scatter",
+    "grad_sum_reduce",
     "halo_exchange",
     "halo_accumulate",
     "halo_exchange_unbalanced",
@@ -264,6 +266,96 @@ def _send_recv_bwd(axis_name, offset, _, g):
 
 
 send_recv.defvjp(_send_recv_fwd, _send_recv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Batch scatter / gradient sum-reduce: the data-parallel axis (paper Eq. 8-9
+# applied block-wise to the batch).
+#
+# S (batch_scatter) restricts a batch that is REPLICATED over the data axis
+# to this replica's own block along ``dim`` — the forward distribution of
+# per-replica microbatches.  Its adjoint S* (grad_sum_reduce) returns each
+# replica's cotangent block to its global batch slot and sums the replica
+# contributions (Eq. 9's sum-reduction, applied to disjoint slots, so the
+# sum is a reassembly): lifted globally, both are the identity on F^B, which
+# is exactly why data parallelism is "free" in the algebra — the cost lives
+# entirely in the PARAMETER path, whose broadcast/sum-reduce pair is the
+# plain B/R of Eq. 8-9 (DESIGN.md §5).
+# ---------------------------------------------------------------------------
+
+def _slot_embed(g: jax.Array, axis_name, dim: int) -> jax.Array:
+    """Place this worker's block into its slot of a zeros global-dim buffer."""
+    k = compat.axis_size(axis_name)
+    i = jax.lax.axis_index(axis_name)
+    shape = list(g.shape)
+    shape[dim] = g.shape[dim] * k
+    buf = jnp.zeros(tuple(shape), g.dtype)
+    start = [0] * g.ndim
+    start[dim] = i * g.shape[dim]
+    return jax.lax.dynamic_update_slice(buf, g, tuple(start))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def batch_scatter(x: jax.Array, axis_name, dim: int) -> jax.Array:
+    """S: restrict a replicated batch to this replica's block along ``dim``.
+
+    The manual adjoint emits the cotangent in CONTRIBUTION form (module
+    comment in the broadcast section): each replica contributes its block
+    embedded at its own slot, zeros elsewhere — the slot sums are collected
+    by whichever psum transposes the replication upstream.
+    """
+    k = compat.axis_size(axis_name)
+    if x.shape[dim] % k:
+        raise ValueError(
+            f"batch_scatter: dim {dim} size {x.shape[dim]} not divisible by "
+            f"axis {axis_name!r} size {k} — a clamped slice would silently "
+            f"drop the trailing rows")
+    n = x.shape[dim] // k
+    i = jax.lax.axis_index(axis_name)
+    return jax.lax.dynamic_slice_in_dim(x, i * n, n, axis=dim)
+
+
+def _batch_scatter_fwd(x, axis_name, dim):
+    return batch_scatter(x, axis_name, dim), None
+
+
+def _batch_scatter_bwd(axis_name, dim, _, g):
+    # Contribution form: no psum here — the slot-embedded blocks sum to the
+    # true global-batch cotangent downstream (paper Eq. 9, disjoint slots).
+    return (_slot_embed(g, axis_name, dim),)
+
+
+batch_scatter.defvjp(_batch_scatter_fwd, _batch_scatter_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def grad_sum_reduce(y: jax.Array, axis_name, dim: int) -> jax.Array:
+    """S* = batch_scatter's adjoint: sum slot-embedded replica contributions.
+
+    Each replica's block returns to its global batch slot and the replica
+    contributions are summed (Eq. 9); the result is the full global-dim
+    tensor, replicated over ``axis_name``.  Because the slots are DISJOINT
+    the sum is a reassembly, realized as a tiled all-gather — moving the
+    blocks once instead of psum-ing a k-fold zero-padded buffer.  The
+    manual adjoint restricts the collected cotangent back to the replica's
+    own slot (S** = S).
+    """
+    return jax.lax.all_gather(y, axis_name, axis=dim, tiled=True)
+
+
+def _gsr_fwd(y, axis_name, dim):
+    return grad_sum_reduce(y, axis_name, dim), None
+
+
+def _gsr_bwd(axis_name, dim, _, g):
+    # The output was replicated, so g arrives as per-replica contributions
+    # (DESIGN §2.1): collect them and restrict to this replica's slot —
+    # psum-then-slice, fused into one psum_scatter.
+    return (jax.lax.psum_scatter(g, axis_name, scatter_dimension=dim,
+                                 tiled=True),)
+
+
+grad_sum_reduce.defvjp(_gsr_fwd, _gsr_bwd)
 
 
 # ---------------------------------------------------------------------------

@@ -32,3 +32,15 @@ def make_pipeline_mesh(num_stages: int, tp: int = 1):
     along ``model`` inside each stage.  The axis names are fixed —
     ``Policy.for_mesh`` auto-binds ``pipe_axis`` by name."""
     return compat.make_mesh((num_stages, tp), ("pipe", "model"))
+
+
+def make_hybrid_mesh(dp: int, num_stages: int, tp: int = 1):
+    """Hybrid DP x pipe x tensor 3-D mesh (DESIGN §5): per-replica batch
+    shards move along ``data`` (BatchScatter / gradient sum-reduce), stage
+    boundaries along ``pipe``, TP ring collectives along ``model`` — all
+    three of the paper's parallelism styles on ONE mesh, so every
+    (dp, S, tp) factorization of the device count is a scenario.  The axis
+    names are fixed; ``Policy.for_mesh`` auto-binds all three by name.
+    Degenerate factorizations reduce exactly: dp=1 to the 2-D pipeline
+    mesh's semantics, num_stages=1 to pure DP x TP."""
+    return compat.make_mesh((dp, num_stages, tp), ("data", "pipe", "model"))

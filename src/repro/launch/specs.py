@@ -76,6 +76,39 @@ def pipeline_input_specs(cfg: ModelConfig, shape_name: str,
             sds((num_microbatches, mb, S), jnp.int32))
 
 
+def replica_assignment(global_batch: int, dp: int,
+                       num_microbatches: int) -> list[range]:
+    """Per-replica row ranges of each microbatch under the hybrid 3-D cut.
+
+    The global batch is first cut into ``num_microbatches`` microbatches of
+    ``B/M`` rows (the pipeline schedule's unit), then each microbatch is
+    scattered over the ``dp`` replicas (``BatchScatter`` on the data axis):
+    replica r owns rows ``[r*b, (r+1)*b)`` of EVERY microbatch, where
+    ``b = B/(M*dp)`` — a planning/reporting helper mirroring
+    ``stage_assignment`` for the pipe axis.
+    """
+    if global_batch % (num_microbatches * dp):
+        raise ValueError(
+            f"global batch {global_batch} not divisible by num_microbatches "
+            f"x dp = {num_microbatches} x {dp}")
+    b = global_batch // (num_microbatches * dp)
+    return [range(r * b, (r + 1) * b) for r in range(dp)]
+
+
+def hybrid_input_specs(cfg: ModelConfig, shape_name: str,
+                       num_microbatches: int, dp: int) -> tuple[dict, object]:
+    """Microbatched (xs, labels) specs for the hybrid DP x pipe x tensor
+    executor: the SAME host-side (M, B/M, S) cut as the pipeline — the
+    per-replica restriction to (M, B/(M*dp), S) happens at the region
+    boundary (``Partitioned(None, "data")``), not in the host arrays —
+    plus the B % (M*dp) divisibility check the train step enforces."""
+    cell = SHAPES[shape_name]
+    if cell.kind != "train":
+        raise ValueError(f"hybrid specs need a train cell, got {cell.kind}")
+    replica_assignment(cell.global_batch, dp, num_microbatches)
+    return pipeline_input_specs(cfg, shape_name, num_microbatches)
+
+
 def param_specs(cfg: ModelConfig):
     """Parameter ShapeDtypeStructs via eval_shape over the real initializer
     (no allocation)."""

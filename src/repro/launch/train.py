@@ -3,8 +3,15 @@
     PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --reduced \
         --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
 
+Hybrid DP x pipe x tensor (DESIGN §5) — any (dp, pp, tp) factorization of
+the visible devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --reduced \
+        --hybrid-mesh 2,2,2 --microbatches 4 --steps 20 --batch 16
+
 On this CPU container use --reduced (tiny same-family config); on real
-hardware drop it and point --mesh at the pod.  The loop is the fault-
+hardware drop it and point the mesh at the pod.  The loop is the fault-
 tolerant one from train/loop.py (atomic checkpoints, auto-resume,
 straggler monitor).
 """
@@ -18,11 +25,12 @@ import jax
 
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.data import DataConfig, PrefetchIterator, SyntheticLM
-from repro.launch.mesh import make_host_mesh
-from repro.models import init_params
+from repro.launch.mesh import make_host_mesh, make_hybrid_mesh
+from repro.models import init_params, init_pipeline_params
 from repro.optim import make_optimizer
 from repro.sharding import Policy
-from repro.train import (LoopConfig, build_train_step, init_train_state,
+from repro.train import (LoopConfig, build_hybrid_train_step,
+                         build_train_step, init_train_state,
                          restart_on_failure)
 
 
@@ -37,24 +45,49 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--hybrid-mesh", default=None, metavar="DP,PP,TP",
+                    help="run the hybrid 3-D executor on a (data, pipe, "
+                         "model) mesh with this factorization")
+    ap.add_argument("--microbatches", type=int, default=4,
+                    help="pipeline microbatches per step (hybrid mesh only)")
+    ap.add_argument("--schedule", default="1f1b",
+                    choices=("1f1b", "fill_drain"))
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     n_dev = len(jax.devices())
-    mesh = make_host_mesh((n_dev, 1))
-    policy = Policy(mesh=mesh) if n_dev > 1 else None
+    hybrid = None
+    if args.hybrid_mesh:
+        dp, pp, tp = (int(x) for x in args.hybrid_mesh.split(","))
+        if dp * pp * tp != n_dev:
+            raise SystemExit(f"--hybrid-mesh {dp}x{pp}x{tp} != {n_dev} devices")
+        hybrid = (dp, pp, tp)
+        mesh = make_hybrid_mesh(dp, pp, tp)
+        policy = Policy.for_mesh(mesh, explicit_tp=tp > 1)
+    else:
+        mesh = make_host_mesh((n_dev, 1))
+        policy = Policy(mesh=mesh) if n_dev > 1 else None
 
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                                   global_batch=args.batch, seed=args.seed))
     opt = make_optimizer(cfg.optimizer, total_steps=args.steps,
                          base_lr=args.lr)
     cfg = dataclasses.replace(cfg, grad_accum=1)
-    step = jax.jit(build_train_step(cfg, policy, opt))
+    if hybrid:
+        step = jax.jit(build_hybrid_train_step(
+            cfg, policy, opt, num_microbatches=args.microbatches,
+            schedule=args.schedule))
+    else:
+        step = jax.jit(build_train_step(cfg, policy, opt))
 
     def make_state():
-        params = init_params(cfg, jax.random.PRNGKey(args.seed))
+        if hybrid:
+            params = init_pipeline_params(cfg, jax.random.PRNGKey(args.seed),
+                                          policy.pipe_size)
+        else:
+            params = init_params(cfg, jax.random.PRNGKey(args.seed))
         n = sum(l.size for l in jax.tree_util.tree_leaves(params))
         print(f"{args.arch}: {n/1e6:.1f}M params, mesh={mesh.shape}")
         return init_train_state(cfg, params, opt)

@@ -46,6 +46,11 @@ def init_params(cfg, key, dtype=None):
 # the embedding becomes the stage-0 prologue and the final-norm + head the
 # last-stage epilogue.  ``to_pipeline_params``/``from_pipeline_params`` are
 # exact inverses so tests can map gradients back onto the dense layout.
+#
+# The same cut serves the hybrid DP x pipe x tensor mesh (DESIGN §5): no
+# parameter dimension ever names the data axis, so every leaf is REPLICATED
+# across replicas — the paper's parameter broadcast B — and the executor's
+# end-of-drain psum over the data axis is its Eq. 9 adjoint R.
 # ---------------------------------------------------------------------------
 
 def _check_pipelineable(cfg):
@@ -105,7 +110,9 @@ def pipeline_param_parts(cfg, policy, pparams):
     Stage leaves lead with the ``pipe`` axis (the stacked stage dim); under
     ``policy.explicit_tp`` the projection/norm leaves additionally carry
     their model-axis TP sharding (mirroring the fused TP sublayer's specs).
-    pre/post leaves stay replicated.
+    pre/post leaves stay replicated.  No declaration names the data axis:
+    on a hybrid 3-D mesh all parameters are replicated across DP replicas
+    (the broadcast whose adjoint is the drain-tail gradient sum-reduce).
     """
     from repro.sharding import Partitioned
 

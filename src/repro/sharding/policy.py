@@ -3,6 +3,10 @@
 The production mesh is (pod, data, model) (launch/mesh.py).  Logical axes:
 
   batch   -> (pod, data)          data parallelism (pod = cross-pod DP)
+  data    -> data_axis            the bare DP replica axis (no pod): hybrid
+                                   3-D meshes shard per-replica microbatches
+                                   with it (BatchScatter/GradSumReduce pair,
+                                   core/linop.py; DESIGN §5)
   seq     -> model                sequence parallelism for residuals (SP)
   heads   -> model                tensor parallelism (paper §4 affine P_fo)
   ff      -> model                TP on FFN hidden   (paper §4 affine P_fo)
@@ -110,8 +114,16 @@ class Policy:
         if logical is None or logical == "none":
             return None
         if logical == "batch":
-            return ((self.pod_axis, self.data_axis)
-                    if self.pod_axis else self.data_axis)
+            data = self.active_data_axis
+            if self.pod_axis:
+                return (self.pod_axis, data) if data else self.pod_axis
+            return data
+        if logical == "data":
+            # The bare replica axis (no pod component): per-replica
+            # microbatch sharding on hybrid DP x pipe x tensor meshes.
+            # Degenerates to replication when the mesh carries no such axis
+            # (e.g. the default name "data" on a pure (pipe, model) mesh).
+            return self.active_data_axis
         if logical == "seq":
             return self.model_axis if self.seq_shard else None
         if logical in ("heads", "ff", "experts", "vocab", "kvdim", "kvseq",
@@ -125,8 +137,10 @@ class Policy:
         if logical == "fsdp":
             if not self.fsdp:
                 return None
-            return ((self.pod_axis, self.data_axis)
-                    if self.fsdp_over_pod and self.pod_axis else self.data_axis)
+            data = self.active_data_axis
+            if self.fsdp_over_pod and self.pod_axis:
+                return (self.pod_axis, data) if data else self.pod_axis
+            return data
         raise ValueError(f"unknown logical axis {logical!r}")
 
     def spec(self, *logical) -> P:
@@ -143,6 +157,20 @@ class Policy:
         return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[name]
 
     @property
+    def active_data_axis(self) -> str | None:
+        """``data_axis`` if it names a LIVE mesh axis, else None.
+
+        The single predicate for "does this policy really have a DP axis":
+        a policy may carry the default ``data_axis="data"`` while its mesh
+        has no such axis (a pure pipe x tensor mesh), and every DP consumer
+        — logical-"data" resolution, the hybrid executor's replica psums,
+        the train step's batch divisibility — must degenerate identically.
+        """
+        if self.data_axis and self.data_axis in self.mesh.axis_names:
+            return self.data_axis
+        return None
+
+    @property
     def model_size(self) -> int:
         return self.axis_size(self.model_axis) if self.model_axis else 1
 
@@ -152,7 +180,8 @@ class Policy:
 
     @property
     def dp_size(self) -> int:
-        n = self.axis_size(self.data_axis) if self.data_axis else 1
+        ax = self.active_data_axis
+        n = self.axis_size(ax) if ax else 1
         if self.pod_axis:
             n *= self.axis_size(self.pod_axis)
         return n

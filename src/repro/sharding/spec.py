@@ -12,9 +12,11 @@ Resolution rules per entry (see ``Policy.resolve_axis``):
   a mesh axis name   -> that axis, verbatim (lets mesh-generic code — tests
                         on ("fo","fi") or ("h","w") meshes — skip the
                         logical table)
-  a logical name     -> ``Policy.phys`` (batch, seq, heads, ff, experts,
-                        vocab, fsdp, kvdim, model, ...), extended by
-                        ``Policy.bind(...)`` aliases
+  a logical name     -> ``Policy.phys`` (batch, data, seq, heads, ff,
+                        experts, vocab, fsdp, kvdim, model, pipe, ...),
+                        extended by ``Policy.bind(...)`` aliases; ``data``
+                        is the bare DP replica axis of hybrid 3-D meshes
+                        (per-replica microbatch sharding, DESIGN §5)
   a tuple of entries -> resolved element-wise (multi-axis sharding)
 """
 

@@ -105,20 +105,28 @@ def build_train_step(cfg, policy, optimizer, *, aux_weight: float = 0.01,
     return train_step
 
 
-def build_pipeline_train_step(cfg, policy, optimizer, *,
-                              num_microbatches: int, schedule: str = "1f1b",
-                              max_grad_norm: float = 1.0):
-    """Train step over a pipeline-parallel model cut (core/pipeline.py).
+def build_hybrid_train_step(cfg, policy, optimizer, *,
+                            num_microbatches: int, schedule: str = "1f1b",
+                            max_grad_norm: float = 1.0):
+    """Train step over the hybrid DP x pipe x tensor 3-D mesh (DESIGN §5).
 
-    The loss and gradients come from the scheduled SPMD pipeline executor
-    (fill-drain or 1F1B) running in ONE shard_map over ``policy.mesh``'s
-    (pipe, model) axes; microbatch loss/grad accumulation happens INSIDE the
-    schedule (each backward slot accumulates into the stage's gradient
-    ring), so ``cfg.grad_accum`` is subsumed by ``num_microbatches``.  The
-    state's params follow the {'pre', 'stage', 'post'} pipeline layout
-    (``models.init_pipeline_params``).  Clip + optimizer update match
-    ``build_train_step``; metrics additionally carry the schedule's static
-    bubble fraction.  Wrap in jax.jit like ``build_train_step``.
+    One scheduled SPMD executor call (core/pipeline.py) runs the WHOLE step
+    in ONE shard_map over ``policy.mesh``: the global batch is cut into
+    ``num_microbatches`` microbatches, each microbatch is restricted to
+    per-replica rows at the region boundary (the ``BatchScatter`` operator
+    over ``policy.data_axis``), every replica drives the same fill-drain /
+    1F1B schedule over its ``pipe`` stages with TP ring collectives live
+    inside stage bodies, and the cross-replica gradient sum-reduce — the
+    parameter broadcast's Eq. 9 adjoint — rides the tail of the backward
+    drain inside the same region (no separate allreduce pass).
+
+    Degenerate factorizations reduce exactly: ``policy.data_axis`` unset or
+    dp=1 is the pure pipeline step (``build_pipeline_train_step``); a
+    single-stage mesh is pure DP x TP.  Microbatch loss/grad accumulation
+    happens inside the schedule, so ``cfg.grad_accum`` is subsumed by
+    ``num_microbatches``.  State params follow the {'pre','stage','post'}
+    pipeline layout; clip + optimizer update match ``build_train_step``;
+    metrics carry the schedule's static bubble fraction.  Wrap in jax.jit.
     """
     from repro.core.pipeline import make_schedule, pipeline_value_and_grad
     from repro.models.model import (init_pipeline_params, pipeline_fns,
@@ -137,22 +145,28 @@ def build_pipeline_train_step(cfg, policy, optimizer, *,
         jax.ShapeDtypeStruct((2,), jnp.uint32))
     parts = pipeline_param_parts(cfg, policy, pspecs)
     explicit = getattr(policy, "explicit_tp", False)
+    # Per-replica microbatch restriction: the in-boundary over the data axis
+    # IS the BatchScatter operator (core/linop.py); with no data axis the
+    # logical "data" resolves to None and the spec degenerates to replicated.
+    mb_part = Partitioned(None, "data")
     pvg = pipeline_value_and_grad(
         pre_fn, stage_fn, post_fn, policy, sched,
         params_parts=parts,
-        x_parts={"tokens": Partitioned()},
-        y_parts=Partitioned(),
+        x_parts={"tokens": mb_part},
+        y_parts=mb_part,
         pre_psum_axes=(policy.model_axis,) if explicit else (),
         jit=False)
     bubble = sched.bubble_fraction()
+    data_axis = policy.active_data_axis
+    dp = policy.axis_size(data_axis) if data_axis else 1
 
     def train_step(state, batch):
         params = state["params"]
         M = num_microbatches
-        if batch["tokens"].shape[0] % M:
+        if batch["tokens"].shape[0] % (M * dp):
             raise ValueError(
                 f"global batch {batch['tokens'].shape[0]} not divisible by "
-                f"num_microbatches={M}")
+                f"num_microbatches x dp = {M} x {dp}")
         mbs = jax.tree_util.tree_map(
             lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
         loss, grads = pvg(params, {"tokens": mbs["tokens"]}, mbs["labels"])
@@ -167,6 +181,31 @@ def build_pipeline_train_step(cfg, policy, optimizer, *,
         return new_state, metrics
 
     return train_step
+
+
+def build_pipeline_train_step(cfg, policy, optimizer, *,
+                              num_microbatches: int, schedule: str = "1f1b",
+                              max_grad_norm: float = 1.0):
+    """Train step over a pipeline-parallel model cut (core/pipeline.py).
+
+    The loss and gradients come from the scheduled SPMD pipeline executor
+    (fill-drain or 1F1B) running in ONE shard_map over ``policy.mesh``'s
+    (pipe, model) axes; microbatch loss/grad accumulation happens INSIDE the
+    schedule (each backward slot accumulates into the stage's gradient
+    ring), so ``cfg.grad_accum`` is subsumed by ``num_microbatches``.  The
+    state's params follow the {'pre', 'stage', 'post'} pipeline layout
+    (``models.init_pipeline_params``).  Clip + optimizer update match
+    ``build_train_step``; metrics additionally carry the schedule's static
+    bubble fraction.  Wrap in jax.jit like ``build_train_step``.
+
+    This is the dp=1 face of ``build_hybrid_train_step`` — on a 2-D
+    (pipe, model) mesh the data axis is absent and the hybrid step's
+    per-replica restriction and cross-replica reductions degenerate to
+    no-ops, so the two builders share one implementation.
+    """
+    return build_hybrid_train_step(
+        cfg, policy, optimizer, num_microbatches=num_microbatches,
+        schedule=schedule, max_grad_norm=max_grad_norm)
 
 
 def init_train_state(cfg, params, optimizer):

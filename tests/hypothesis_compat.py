@@ -2,16 +2,19 @@
 fallback so the property tests still execute (with fixed pseudo-random
 examples) instead of failing collection.
 
-Only the subset the suite uses is implemented: ``st.integers``, ``st.data``
-(with ``data.draw``), ``@given`` over keyword strategies, and ``@settings``.
+Only the subset the suite uses is implemented: ``st.integers``,
+``st.sampled_from``, ``st.data`` (with ``data.draw``), ``@given`` over
+keyword strategies, ``@settings``, and ``HealthCheck``.
 """
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
-    from hypothesis import given, settings, strategies  # noqa: F401
+    from hypothesis import HealthCheck, given, settings, strategies  # noqa: F401
 
 except ModuleNotFoundError:
 
     import random
+
+    HealthCheck = ()  # list(HealthCheck) == [] — nothing to suppress
 
     class _Integers:
         def __init__(self, lo, hi):
@@ -19,6 +22,13 @@ except ModuleNotFoundError:
 
         def sample(self, rng):
             return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom:
+        def __init__(self, seq):
+            self.seq = list(seq)
+
+        def sample(self, rng):
+            return rng.choice(self.seq)
 
     class _Data:
         """Marker strategy: materialized per-example as a _DataObject."""
@@ -37,6 +47,10 @@ except ModuleNotFoundError:
         @staticmethod
         def integers(min_value, max_value):
             return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(seq):
+            return _SampledFrom(seq)
 
         @staticmethod
         def data():

@@ -7,10 +7,19 @@ import sys
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+# tests/ itself, for the shared hypothesis_compat shim (the fuzzer).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax  # noqa: E402
 import pytest  # noqa: E402
 from repro import compat  # noqa: E402
+
+
+def pytest_collection_modifyitems(items):
+    """Every test in this directory is part of the multi-device suite: tag
+    it ``md`` so tier-1 can deselect explicitly (``-m "not md"``)."""
+    for item in items:
+        item.add_marker(pytest.mark.md)
 
 
 @pytest.fixture(scope="session")

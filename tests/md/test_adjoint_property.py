@@ -1,0 +1,175 @@
+"""Property-based adjoint fuzzer: Eq. 13 and the reversal law for RANDOM
+operator chains, not a hand-picked list.
+
+Each example draws a mesh-axis choice, a starting shape, and a chain of
+1-5 ``LinearOp``s whose boundary *spaces* compose (the paper's operators
+are maps between specific global vector spaces — replicated F^n vs
+k-worker-stacked F^{kn} — so the generator tracks the space signature
+between ops instead of sampling ill-typed composites), then asserts:
+
+  - ``check_adjoint``: <Ax, y> == <x, A*y> under the lifted global
+    operators AND jax.vjp coherence (paper Eq. 13), on real devices;
+  - the §2 reversal law ``(A @ B).T == B.T @ A.T``, structurally.
+
+Runs on whatever host devices exist: with 8 devices it fuzzes 1-D/2-D/3-D
+meshes (axis sizes 8, 2, 4); with 1 device every axis degenerates to size
+1 and the algebra must still hold (the CI device-count matrix covers both).
+"""
+
+import jax
+from hypothesis_compat import HealthCheck, given, settings, strategies as st
+
+from repro import compat
+from repro.core import linop
+from repro.core.linop import check_adjoint
+
+MAX_DIM = 256          # cap local growth (all_gather/grad_sum_reduce x k)
+N_EXAMPLES = 60        # >= 50 random composites per CI run
+
+
+def _axis_choices():
+    """(mesh, axis, k) triples over however many host devices exist."""
+    n = len(jax.devices())
+    choices = [(compat.make_mesh((n,), ("ax0",)), "ax0", n)]
+    if n >= 8:
+        m2 = compat.make_mesh((2, 4), ("d0", "d1"))
+        m3 = compat.make_mesh((2, 2, 2), ("data", "pipe", "model"))
+        choices += [(m2, "d0", 2), (m2, "d1", 4),
+                    (m3, "data", 2), (m3, "pipe", 2), (m3, "model", 2)]
+    return choices
+
+
+_CHOICES = _axis_choices()
+
+
+def _moves(ax, k, sig, ls):
+    """Ops applicable in state (sig, ls): sig is None for the replicated
+    space, or the sharded tensor dim; ls is the LOCAL shard shape."""
+    rank = len(ls)
+    mv = [("identity", None)] if sig is None else []
+    if sig is None:
+        mv.append(("broadcast", None))
+        for d in range(rank):
+            if ls[d] % k == 0:
+                mv.append(("batch_scatter", d))
+    else:
+        d = sig
+        if d == 0:
+            mv += [("sum_reduce", None), ("all_reduce", None),
+                   ("send_recv", -2), ("send_recv", -1),
+                   ("send_recv", 1), ("send_recv", 2)]
+        if ls[d] * k <= MAX_DIM:
+            mv += [("grad_sum_reduce", None), ("all_gather", None)]
+        if ls[d] % k == 0:
+            mv.append(("reduce_scatter", None))
+        for s in range(rank):
+            if s != d and ls[s] % k == 0 and ls[d] * k <= MAX_DIM:
+                mv.append(("all_to_all", s))
+        for left, right in ((0, 1), (1, 0), (1, 1), (2, 1), (2, 2)):
+            if ls[d] >= max(left, right) and ls[d] + left + right <= MAX_DIM:
+                mv.append(("halo", (left, right)))
+            if ls[d] - left - right >= max(left, right, 1):
+                mv.append(("halo_acc", (left, right)))
+    return mv
+
+
+def _apply(ax, k, sig, ls, move):
+    """Materialize a move: returns (op, new_sig, new_local_shape)."""
+    kind, arg = move
+    ls = list(ls)
+    if kind == "identity":
+        return linop.Identity(), None, ls
+    if kind == "broadcast":
+        return linop.Broadcast(ax), 0, ls
+    if kind == "batch_scatter":
+        ls[arg] //= k
+        return linop.BatchScatter(ax, arg), arg, ls
+    d = sig
+    if kind == "sum_reduce":
+        return linop.SumReduce(ax), None, ls
+    if kind == "all_reduce":
+        return linop.AllReduce(ax), d, ls
+    if kind == "send_recv":
+        return linop.SendRecv(ax, arg), d, ls
+    if kind == "grad_sum_reduce":
+        ls[d] *= k
+        return linop.GradSumReduce(ax, d), None, ls
+    if kind == "all_gather":
+        ls[d] *= k
+        return linop.AllGather(ax, d), d, ls
+    if kind == "reduce_scatter":
+        ls[d] //= k
+        return linop.ReduceScatter(ax, d), d, ls
+    if kind == "all_to_all":
+        s = arg
+        ls[d] *= k
+        ls[s] //= k
+        return linop.AllToAll(ax, s, d), s, ls
+    if kind == "halo":
+        left, right = arg
+        ls[d] += left + right
+        return linop.HaloExchange(ax, d, left, right), d, ls
+    if kind == "halo_acc":
+        left, right = arg
+        ls[d] -= left + right
+        return linop.HaloAccumulate(ax, d, left, right), d, ls
+    raise AssertionError(kind)
+
+
+def _draw_chain(data, ax, k):
+    """A space-typed random chain: (ops in application order, global shape)."""
+    rank = data.draw(st.integers(2, 3))
+    if data.draw(st.integers(0, 1)):
+        sig = data.draw(st.integers(0, rank - 1))
+        ls = [data.draw(st.integers(1, 4)) for _ in range(rank)]
+    else:
+        sig = None
+        # replicated start: dims are multiples of k so BatchScatter is live
+        ls = [k * data.draw(st.integers(1, 2)) for _ in range(rank)]
+    gshape = list(ls)
+    if sig is not None:
+        gshape[sig] *= k
+    n_ops = data.draw(st.integers(1, 5))
+    ops = []
+    for _ in range(n_ops):
+        mv = _moves(ax, k, sig, ls)
+        if not mv:
+            break
+        op, sig, ls = _apply(ax, k, sig, ls, data.draw(st.sampled_from(mv)))
+        ops.append(op)
+    return ops, tuple(gshape)
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None,
+          suppress_health_check=list(HealthCheck))
+@given(data=st.data())
+def test_random_composites_pass_eq13_and_reversal(data):
+    mesh, ax, k = _CHOICES[data.draw(st.integers(0, len(_CHOICES) - 1))]
+    ops, gshape = _draw_chain(data, ax, k)
+    chain = ops[0]
+    for op in ops[1:]:
+        chain = op @ chain
+    # Eq. 13 on real devices, for the composite AND (implicitly) every
+    # custom-vjp rule inside it.
+    r = check_adjoint(chain, mesh, gshape,
+                      name=f"fuzz[{ax}x{k}]{[type(o).__name__ for o in ops]}")
+    assert r.passed, r
+    # §2 reversal law, structurally, plus involution: ``ops`` is in
+    # APPLICATION order, so the adjoint chain applies the adjoints in the
+    # opposite order — matrix order (first-applied op's adjoint outermost-
+    # last) is exactly ``ops`` order again.
+    if isinstance(chain, linop.Compose):
+        assert chain.T == linop.Compose(tuple(o.T for o in ops))
+    else:
+        assert chain.T == ops[0].T
+    assert chain.T.T == chain
+
+
+def test_new_dp_pair_in_adjoint_registry():
+    """The DP pair is registered centrally like every other op (structural
+    — axis strings are opaque to frozen-dataclass equality, so one axis
+    name covers all meshes; device-backed coverage is the fuzzer above)."""
+    ax = "data"
+    assert linop.BatchScatter(ax, 1).T == linop.GradSumReduce(ax, 1)
+    assert linop.GradSumReduce(ax, 1).T == linop.BatchScatter(ax, 1)
+    assert linop.BatchScatter(ax, 0).T.T == linop.BatchScatter(ax, 0)

@@ -1,0 +1,242 @@
+"""Hybrid DP x pipe x tensor parallelism on 8 real devices (DESIGN §5).
+
+Covers the PR's acceptance bar: the (dp=2, S=2, tp=2) hybrid step on the
+3-D mesh matches the single-device fp32 reference in forward loss AND every
+parameter gradient, and the degenerate factorizations reduce exactly —
+dp=1 equals the 2-D pipeline path of PR 2, S=1 equals a pure DP x TP
+program built without any pipeline machinery.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ModelConfig
+from repro.core.compile import dist_jit
+from repro.core.pipeline import make_schedule, pipeline_value_and_grad
+from repro.launch.mesh import make_hybrid_mesh, make_pipeline_mesh
+from repro.models import (forward, from_pipeline_params, init_pipeline_params,
+                          pipeline_fns, pipeline_param_parts)
+from repro.sharding import Partitioned, Policy
+from repro.train import cross_entropy
+
+CFG = ModelConfig(name="hy_test", family="dense", num_layers=4, d_model=64,
+                  num_heads=8, num_kv_heads=4, head_dim=8, d_ff=128,
+                  vocab_size=128, dtype="float32", remat=False, attn_chunk=16)
+
+
+def _need8():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+
+
+def _data(M, B, L, seed=1):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (B, L), 0, CFG.vocab_size)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (B, L), 0,
+                                CFG.vocab_size)
+    return ({"tokens": tokens.reshape(M, B // M, L)},
+            labels.reshape(M, B // M, L))
+
+
+def _hybrid_loss_and_grads(mesh, schedule_name, M, *, explicit_tp=True,
+                           pparams=None):
+    """Run the scheduled executor on ``mesh`` (2-D pipe x tp or 3-D hybrid);
+    microbatch rows ride the data axis when the mesh has one."""
+    S = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pipe", 1)
+    pol = Policy.for_mesh(mesh, explicit_tp=explicit_tp)
+    if pparams is None:
+        pparams = init_pipeline_params(CFG, jax.random.PRNGKey(0), S)
+    xs, ys = _data(M, 4 * M, 16)
+    pre_fn, stage_fn, logits_fn = pipeline_fns(CFG, pol)
+
+    def post_fn(p_post, y, labels):
+        return cross_entropy(logits_fn(p_post, y), labels)[0]
+
+    mb_part = Partitioned(None, "data")
+    f = pipeline_value_and_grad(
+        pre_fn, stage_fn, post_fn, pol, make_schedule(schedule_name, M, S),
+        params_parts=pipeline_param_parts(CFG, pol, pparams),
+        x_parts={"tokens": mb_part}, y_parts=mb_part,
+        pre_psum_axes=(pol.model_axis,) if explicit_tp else ())
+    loss, grads = f(pparams, xs, ys)
+    return pparams, xs, ys, loss, grads
+
+
+def _reference_loss_and_grads(pparams, xs, ys):
+    """Single-device fp32 reference: per-microbatch forward + AD."""
+    dense = from_pipeline_params(pparams)
+    M = ys.shape[0]
+
+    def ref_loss(p):
+        tot = 0.0
+        for m in range(M):
+            logits, _, _ = forward(p, {"tokens": xs["tokens"][m]}, CFG, None,
+                                   mode="train")
+            tot = tot + cross_entropy(logits, ys[m])[0]
+        return tot / M
+
+    return jax.value_and_grad(ref_loss)(dense)
+
+
+def _assert_matches_reference(pparams, xs, ys, loss, grads):
+    ref_loss, ref_grads = _reference_loss_and_grads(pparams, xs, ys)
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=2e-5)
+    got = dict(jax.tree_util.tree_leaves_with_path(
+        from_pipeline_params(grads)))
+    for path, ref in jax.tree_util.tree_leaves_with_path(ref_grads):
+        np.testing.assert_allclose(np.asarray(got[path]), np.asarray(ref),
+                                   rtol=5e-4, atol=5e-4, err_msg=str(path))
+
+
+def _assert_trees_close(a, b, *, rtol=1e-6, atol=1e-7):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = dict(jax.tree_util.tree_leaves_with_path(b))
+    assert len(la) == len(lb)
+    for path, leaf in la:
+        np.testing.assert_allclose(np.asarray(leaf), np.asarray(lb[path]),
+                                   rtol=rtol, atol=atol, err_msg=str(path))
+
+
+class TestHybridMatchesReference:
+    def test_2dp_2stage_2tp(self):
+        """The acceptance criterion: (dp, S, tp) = (2, 2, 2) on 8 devices
+        vs fp32 single-device loss and parameter gradients."""
+        _need8()
+        mesh = make_hybrid_mesh(2, 2, 2)
+        _assert_matches_reference(
+            *_hybrid_loss_and_grads(mesh, "1f1b", M=4))
+
+    def test_2dp_2stage_2tp_fill_drain(self):
+        _need8()
+        mesh = make_hybrid_mesh(2, 2, 2)
+        _assert_matches_reference(
+            *_hybrid_loss_and_grads(mesh, "fill_drain", M=4))
+
+    def test_4dp_2stage_1tp(self):
+        """A second factorization of the same 8 devices: wide DP, no TP."""
+        _need8()
+        mesh = make_hybrid_mesh(4, 2, 1)
+        _assert_matches_reference(
+            *_hybrid_loss_and_grads(mesh, "1f1b", M=4, explicit_tp=False))
+
+
+class TestDegenerateFactorizations:
+    def test_dp1_equals_pipeline_path(self):
+        """(1, S, tp) on the 3-D mesh reduces to PR 2's 2-D pipeline path:
+        same loss, same gradients."""
+        _need8()
+        S, tp, M = 2, 2, 4
+        pparams = init_pipeline_params(CFG, jax.random.PRNGKey(0), S)
+        *_, loss3, grads3 = _hybrid_loss_and_grads(
+            make_hybrid_mesh(1, S, tp), "1f1b", M, pparams=pparams)
+        *_, loss2, grads2 = _hybrid_loss_and_grads(
+            make_pipeline_mesh(S, tp), "1f1b", M, pparams=pparams)
+        np.testing.assert_allclose(float(loss3), float(loss2), rtol=1e-6)
+        _assert_trees_close(grads3, grads2)
+
+    def test_s1_reduces_to_pure_dp_tp(self):
+        """(dp, 1, tp): the schedule degenerates and the hybrid step equals
+        a pure DP x TP program built WITHOUT the pipeline machinery — AD
+        end-to-end through the microbatch loop, DP mean via psum."""
+        _need8()
+        dp, tp, M = 2, 4, 2
+        mesh = make_hybrid_mesh(dp, 1, tp)
+        pparams, xs, ys, loss, grads = _hybrid_loss_and_grads(
+            mesh, "1f1b", M)
+        pol = Policy.for_mesh(mesh, explicit_tp=True)
+        pre_fn, stage_fn, logits_fn = pipeline_fns(CFG, pol)
+
+        def body(params, xs, ys):
+            def loss_fn(p):
+                p_stage = jax.tree_util.tree_map(
+                    lambda a: jnp.squeeze(a, 0), p["stage"])
+                tot = 0.0
+                for m in range(M):
+                    mb = jax.tree_util.tree_map(lambda a: a[m], xs)
+                    y = stage_fn(p_stage, pre_fn(p["pre"], mb))
+                    tot = tot + cross_entropy(
+                        logits_fn(p["post"], y), ys[m])[0]
+                return tot / M
+
+            loss, g = jax.value_and_grad(loss_fn)(params)
+            # DP mean (Eq. 9 gradient sum-reduce) + the contribution-form
+            # model-axis psum for the feature-sliced prologue (DESIGN §2.1).
+            dpsz = pol.axis_size(pol.data_axis)
+            g["pre"] = jax.tree_util.tree_map(
+                lambda a: jax.lax.psum(a, (pol.data_axis, pol.model_axis)),
+                g["pre"])
+            g["stage"] = jax.tree_util.tree_map(
+                lambda a: jax.lax.psum(a, pol.data_axis), g["stage"])
+            g["post"] = jax.tree_util.tree_map(
+                lambda a: jax.lax.psum(a, pol.data_axis), g["post"])
+            g = jax.tree_util.tree_map(lambda a: a / dpsz, g)
+            return jax.lax.psum(loss, pol.data_axis) / dpsz, g
+
+        mb_part = Partitioned(None, "data")
+        parts = pipeline_param_parts(CFG, pol, pparams)
+        from jax.sharding import PartitionSpec as P
+        ref = dist_jit(body, pol, (parts, {"tokens": mb_part}, mb_part),
+                       (P(), parts))
+        ref_loss, ref_grads = ref(pparams, xs, ys)
+        np.testing.assert_allclose(float(loss), float(ref_loss), rtol=2e-5)
+        _assert_trees_close(grads, ref_grads, rtol=5e-5, atol=5e-6)
+
+
+class TestHybridTrainStep:
+    def test_two_steps_and_dp1_equals_pipeline_builder(self):
+        """build_hybrid_train_step runs on the 3-D mesh; with dp=1 its state
+        after a step is identical to build_pipeline_train_step's."""
+        _need8()
+        from repro.optim import make_optimizer
+        from repro.train import (build_hybrid_train_step,
+                                 build_pipeline_train_step, init_train_state)
+
+        key = jax.random.PRNGKey(3)
+        batch = {"tokens": jax.random.randint(key, (16, 16), 0, 128),
+                 "labels": jax.random.randint(key, (16, 16), 0, 128)}
+
+        pol3 = Policy.for_mesh(make_hybrid_mesh(2, 2, 2), explicit_tp=True)
+        opt = make_optimizer("adamw", total_steps=10)
+        step3 = jax.jit(build_hybrid_train_step(
+            CFG, pol3, opt, num_microbatches=4))
+        params = init_pipeline_params(CFG, jax.random.PRNGKey(0),
+                                      pol3.pipe_size)
+        state = init_train_state(CFG, params, opt)
+        state, m1 = step3(state, batch)
+        state, m2 = step3(state, batch)
+        assert int(state["step"]) == 2
+        assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+        assert float(m2["loss"]) < float(m1["loss"])  # same batch twice
+
+        # dp=1 on the 3-D mesh == the 2-D pipeline builder, step for step.
+        pol_dp1 = Policy.for_mesh(make_hybrid_mesh(1, 2, 2), explicit_tp=True)
+        pol_2d = Policy.for_mesh(make_pipeline_mesh(2, 2), explicit_tp=True)
+        s_a = init_train_state(
+            CFG, init_pipeline_params(CFG, jax.random.PRNGKey(0), 2), opt)
+        s_b = jax.tree_util.tree_map(jnp.copy, s_a)
+        step_a = jax.jit(build_hybrid_train_step(
+            CFG, pol_dp1, opt, num_microbatches=4))
+        step_b = jax.jit(build_pipeline_train_step(
+            CFG, pol_2d, opt, num_microbatches=4))
+        s_a, ma = step_a(s_a, batch)
+        s_b, mb = step_b(s_b, batch)
+        np.testing.assert_allclose(float(ma["loss"]), float(mb["loss"]),
+                                   rtol=1e-6)
+        _assert_trees_close(s_a["params"], s_b["params"])
+
+    def test_batch_not_divisible_raises(self):
+        _need8()
+        from repro.optim import make_optimizer
+        from repro.train import build_hybrid_train_step, init_train_state
+
+        pol = Policy.for_mesh(make_hybrid_mesh(2, 2, 2), explicit_tp=True)
+        opt = make_optimizer("adamw", total_steps=10)
+        step = build_hybrid_train_step(CFG, pol, opt, num_microbatches=4)
+        params = init_pipeline_params(CFG, jax.random.PRNGKey(0), 2)
+        state = init_train_state(CFG, params, opt)
+        bad = {"tokens": jnp.zeros((12, 16), jnp.int32),
+               "labels": jnp.zeros((12, 16), jnp.int32)}
+        with pytest.raises(ValueError, match="not divisible"):
+            step(state, bad)

@@ -25,6 +25,10 @@ CONCRETE_OPS = [
     (linop.AllToAll(AX, 1, 0), (8, 8, 4)),
     (linop.SendRecv(AX, 1), (16, 2)),
     (linop.SendRecv(AX, -2), (16, 2)),
+    (linop.BatchScatter(AX, 0), (16, 3)),
+    (linop.BatchScatter(AX, 1), (3, 16)),
+    (linop.GradSumReduce(AX, 0), (16, 3)),
+    (linop.GradSumReduce(AX, 1), (3, 16)),
     (linop.HaloExchange(AX, 0, 2, 1), (32, 3)),
     (linop.HaloAccumulate(AX, 0, 2, 1), (56, 3)),
     (linop.HaloExchange(AX, 0,
@@ -67,6 +71,9 @@ COMPOSITES = [
     (linop.AllReduce(AX) @ linop.HaloExchange(
         AX, 0, left_widths=(0, 1, 1, 0, 1, 1, 0, 1),
         right_widths=(1, 1, 0, 1, 1, 0, 1, 0)), (32, 2)),
+    # the DP round trip: scatter per-replica batch blocks, sum them back —
+    # S* S = I on the global batch (DESIGN §5); self-adjoint by reversal
+    (linop.GradSumReduce(AX, 1) @ linop.BatchScatter(AX, 1), (4, 16)),
 ]
 
 
@@ -90,6 +97,8 @@ def test_reversal_law_structural():
     assert linop.AllToAll(AX, 1, 0).T == linop.AllToAll(AX, 0, 1)
     assert linop.SendRecv(AX, 3).T == linop.SendRecv(AX, -3)
     assert linop.AllReduce(AX).T == linop.AllReduce(AX)
+    assert linop.BatchScatter(AX, 1).T == linop.GradSumReduce(AX, 1)
+    assert linop.GradSumReduce(AX, 0).T == linop.BatchScatter(AX, 0)
 
 
 def _random_chain(rng, n_ops: int, local0: int):

@@ -16,6 +16,8 @@ from repro.sharding import Policy
 
 @pytest.fixture(scope="module")
 def setup():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
     cfg = reduced(get_config("jamba-v0.1-52b"))
     cfg = dataclasses.replace(cfg, capacity_factor=4.0)  # avoid drops: exact
     key = jax.random.PRNGKey(0)

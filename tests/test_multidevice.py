@@ -17,7 +17,9 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-@pytest.mark.timeout(1800)
+@pytest.mark.md
+@pytest.mark.slow
+@pytest.mark.timeout(3600)
 def test_multidevice_suite():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -29,7 +31,7 @@ def test_multidevice_suite():
         env=env,
         capture_output=True,
         text=True,
-        timeout=1800,
+        timeout=3600,
     )
     if proc.returncode != 0:
         sys.stdout.write(proc.stdout[-8000:])

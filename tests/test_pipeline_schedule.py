@@ -180,3 +180,57 @@ def test_make_pipeline_mesh_binds_policy():
     assert pol1.model_axis is None and pol1.data_axis is None
     assert pol1.resolve_axis("heads") is None
     assert pol1.model_size == 1 and pol1.dp_size == 1
+
+
+def test_replica_assignment_and_hybrid_input_specs():
+    """The hybrid batch cut (DESIGN §5): replica r owns rows [r*b, (r+1)*b)
+    of EVERY microbatch, and the host-side specs stay the (M, B/M, S) cut —
+    the per-replica restriction happens at the region boundary."""
+    from repro.configs import SHAPES
+    from repro.launch.specs import hybrid_input_specs, replica_assignment
+
+    assert [list(r) for r in replica_assignment(16, 2, 4)] == [
+        [0, 1], [2, 3]]
+    assert [list(r) for r in replica_assignment(8, 4, 2)] == [
+        [0], [1], [2], [3]]
+    with pytest.raises(ValueError, match="not divisible"):
+        replica_assignment(16, 3, 4)
+
+    cfg = _cfg()
+    cell = SHAPES["train_4k"]
+    xs, labels = hybrid_input_specs(cfg, "train_4k", num_microbatches=8,
+                                    dp=2)
+    mb = cell.global_batch // 8
+    assert xs["tokens"].shape == (8, mb, cell.seq_len)
+    assert labels.shape == (8, mb, cell.seq_len)
+    # the same divisibility the train step enforces (B % (M*dp))
+    with pytest.raises(ValueError, match="not divisible"):
+        hybrid_input_specs(cfg, "train_4k", num_microbatches=8,
+                           dp=cell.global_batch)
+    with pytest.raises(ValueError, match="train cell"):
+        hybrid_input_specs(cfg, "decode_32k", num_microbatches=2, dp=2)
+
+
+def test_make_hybrid_mesh_binds_policy():
+    """for_mesh auto-binds all three axes of the hybrid 3-D mesh by name,
+    and active_data_axis distinguishes a live DP axis from the default
+    data_axis name on a mesh without one."""
+    from repro.launch.mesh import make_hybrid_mesh, make_pipeline_mesh
+    from repro.sharding import Policy
+
+    pol = Policy.for_mesh(make_hybrid_mesh(1, 1, 1))  # 1-device degenerate
+    assert pol.data_axis == "data" and pol.active_data_axis == "data"
+    assert pol.pipe_axis == "pipe" and pol.model_axis == "model"
+    assert pol.resolve_axis("data") == "data"
+
+    # a directly-constructed Policy on a (pipe, model) mesh keeps the
+    # DEFAULT data_axis="data" with no such mesh axis: every DP consumer
+    # must degenerate (logical "data" -> replicated), not KeyError
+    pol2 = Policy(mesh=make_pipeline_mesh(1, 1), pipe_axis="pipe")
+    assert pol2.data_axis == "data"
+    assert pol2.active_data_axis is None
+    assert pol2.resolve_axis("data") is None
+    # every DP consumer degenerates through the same predicate
+    assert pol2.dp_size == 1
+    assert pol2.phys("batch") is None
+    assert pol2.phys("fsdp") is None
