@@ -11,14 +11,23 @@
                    activation ring depth (4-stage x 2-TP pipeline)
   hybrid_3d        (dp, S, tp) factorizations of 8 devices under the
                    hybrid DP x pipe x tensor executor (fp32-equal losses)
+  ring_attention   context parallelism (DESIGN §6): SP-gather baseline vs
+                   KV-ring CP — us/step per mesh factorization, compiled
+                   seq-all-gather / peak-activation evidence, and the
+                   budget-refusal demo (refused at cp=1, trains at cp=4)
   train_micro      end-to-end small-LM train-step timing (us/step)
 
-Prints ``name,us_per_call,derived`` CSV.  Run:
-  PYTHONPATH=src python -m benchmarks.run [--only adjoint_table,...]
+Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
+writes the machine-readable perf artifact (per-row us + structured extras
++ mesh factorization + device kind) the CI multidevice job uploads as
+BENCH_5.json — the gateable perf trajectory from PR 6 on.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--only adjoint_table,...] \
+      [--json BENCH_5.json]
 (uses 8 host devices; sets XLA_FLAGS when unset)
 """
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -37,8 +46,11 @@ from repro import compat
 ROWS = []
 
 
-def emit(name, us, derived=""):
-    ROWS.append((name, us, derived))
+def emit(name, us, derived="", **extra):
+    """Record one benchmark row.  ``derived`` keeps the human-readable CSV
+    tail; ``extra`` carries structured fields (mesh factorization, byte
+    counts, losses) for the --json artifact."""
+    ROWS.append(dict(name=name, us_per_call=us, derived=derived, **extra))
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
@@ -351,7 +363,7 @@ def bench_hybrid_3d():
 
     losses = {}
     for dp, stages, tp in ((1, 4, 2), (2, 2, 2), (4, 2, 1), (2, 1, 4)):
-        pol = Policy.for_mesh(make_hybrid_mesh(dp, stages, tp),
+        pol = Policy.for_mesh(make_hybrid_mesh(dp, stages, tp=tp),
                               explicit_tp=tp > 1)
         sched = make_schedule("1f1b", M, stages)
         step = jax.jit(build_hybrid_train_step(
@@ -367,6 +379,160 @@ def bench_hybrid_3d():
              f"loss={losses[name]:.4f}")
     ref = next(iter(losses.values()))
     assert all(abs(v - ref) < 1e-4 for v in losses.values()), losses
+
+
+def bench_ring_attention():
+    """Context parallelism (DESIGN §6): the perf evidence for PR 5.
+
+    (a) the SP->TP sequence all-gather is GONE from the compiled CP train
+        step (``seq_dim_allgather_bytes == 0``; the SP baseline's is > 0),
+        replaced by ctx collective-permutes (the KV ring);
+    (b) the largest compiled activation shrinks ~cp-fold at fixed global S
+        (structural stand-in for the per-device attention working set;
+        ``compiled.memory_analysis()`` temp/arg bytes are recorded too);
+    (c) a context length REFUSED by the attention working-set budget on
+        1 device (``check_attention_budget`` raises) trains at cp=4;
+    plus wall-clock us/step per (dp, pp, cp, tp) factorization of the
+    hybrid executor — noisy on emulated CPU, recorded for the trajectory.
+    All programs are asserted fp32-equal in first-step loss first.
+    """
+    from repro.configs import ModelConfig
+    from repro.core.ring_attention import (attention_working_set_bytes,
+                                           check_attention_budget)
+    from repro.launch.mesh import make_hybrid_mesh
+    from repro.models import init_params, init_pipeline_params
+    from repro.optim import make_optimizer
+    from repro.roofline.hlo_profile import (collective_inventory,
+                                            peak_activation_bytes,
+                                            seq_dim_allgather_bytes)
+    from repro.sharding import Policy
+    from repro.train import (build_hybrid_train_step, build_train_step,
+                             init_train_state)
+
+    cfg = ModelConfig(name="cp_micro", family="dense", num_layers=2,
+                      d_model=64, num_heads=8, num_kv_heads=4, head_dim=8,
+                      d_ff=128, vocab_size=256, dtype="float32",
+                      remat=False, attn_chunk=24)
+    B, S, cp = 8, 96, 4          # S distinct from d_model/d_ff/vocab
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.fold_in(key, 1),
+                                          (B, S), 0, cfg.vocab_size)}
+    opt = make_optimizer("adamw", total_steps=100)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+
+    def gspmd_step(pol):
+        step = jax.jit(build_train_step(cfg, pol, opt))
+        state = init_train_state(cfg, params, opt)
+        comp = step.lower(state, batch).compile()
+        _, m = step(state, batch)
+        return step, state, comp, float(m["loss"])
+
+    pol_sp = Policy(mesh=compat.make_mesh((1, 8), ("data", "model")))
+    pol_cp = Policy(mesh=compat.make_mesh((1, cp, 2), ("data", "ctx", "model")),
+                    ctx_axis="ctx")
+    step_sp, st_sp, comp_sp, loss_sp = gspmd_step(pol_sp)
+    step_cp, st_cp, comp_cp, loss_cp = gspmd_step(pol_cp)
+    assert abs(loss_sp - loss_cp) < 1e-4 * abs(loss_sp), (loss_sp, loss_cp)
+
+    hlo_sp, hlo_cp = comp_sp.as_text(), comp_cp.as_text()
+    ag_sp = seq_dim_allgather_bytes(hlo_sp, S)
+    ag_cp = seq_dim_allgather_bytes(hlo_cp, S)
+    assert ag_sp > 0, "SP baseline lost its sequence gather — vacuous bench"
+    assert ag_cp == 0, collective_inventory(hlo_cp)
+    rings = collective_inventory(hlo_cp).get("collective-permute", (0, 0))[0]
+    assert rings > 0
+    peak_sp, peak_cp = (peak_activation_bytes(hlo_sp),
+                        peak_activation_bytes(hlo_cp))
+    assert peak_cp * (cp // 2) <= peak_sp, (peak_sp, peak_cp)
+
+    def mem_stats(comp):
+        try:
+            ma = comp.memory_analysis()
+            return {"temp_bytes": int(ma.temp_size_in_bytes),
+                    "arg_bytes": int(ma.argument_size_in_bytes)}
+        except Exception:                      # backend without the API
+            return {}
+
+    for tag, step, st, loss, ag, peak, comp in (
+            ("sp_gather_1x8", step_sp, st_sp, loss_sp, ag_sp, peak_sp, comp_sp),
+            (f"cp_ring_1x{cp}x2", step_cp, st_cp, loss_cp, ag_cp, peak_cp,
+             comp_cp)):
+        us = timeit(lambda: step(st, batch)[1]["loss"], iters=5, warmup=1)
+        emit(f"ring_attention/{tag}", us,
+             f"seq_allgather_bytes={ag};peak_act_bytes={peak};"
+             f"loss={loss:.4f}",
+             mesh=tag, seq_allgather_bytes=ag, peak_activation_bytes=peak,
+             loss=loss, seq_len=S, **mem_stats(comp))
+
+    # hybrid executor wall-clock per 4-D factorization (same model family,
+    # untied head for the pipeline cut).
+    losses = {}
+    for dp, pp, cpx, tp in ((2, 2, 1, 2), (2, 1, 2, 2), (1, 1, 4, 2),
+                            (2, 1, 4, 1)):
+        pol = Policy.for_mesh(make_hybrid_mesh(dp, pp, cpx, tp),
+                              explicit_tp=tp > 1)
+        step = jax.jit(build_hybrid_train_step(cfg, pol, opt,
+                                               num_microbatches=4))
+        pparams = init_pipeline_params(cfg, jax.random.PRNGKey(1), pp)
+        state = init_train_state(cfg, pparams, opt)
+        _, m = step(state, batch)              # compile
+        name = f"dp{dp}_pp{pp}_cp{cpx}_tp{tp}"
+        losses[name] = float(m["loss"])
+        us = timeit(lambda: step(state, batch)[1]["loss"], iters=5, warmup=1)
+        emit(f"ring_attention/hybrid_{name}", us,
+             f"loss={losses[name]:.4f}", mesh=f"{dp}x{pp}x{cpx}x{tp}",
+             loss=losses[name])
+    ref = next(iter(losses.values()))
+    assert all(abs(v - ref) < 1e-4 for v in losses.values()), losses
+
+    # (c) budget refusal: a context length whose attention working set is
+    # refused on 1 device fits — and really trains — at cp=4.  (Emulated
+    # CPU devices share host RAM, so the deterministic stand-in for the
+    # OOM is the working-set budget of core/ring_attention.py.)
+    S_big, Bb = 1024, 2
+    cfg_big = ModelConfig(name="cp_long", family="dense", num_layers=2,
+                          d_model=64, num_heads=8, num_kv_heads=4,
+                          head_dim=8, d_ff=128, vocab_size=256,
+                          dtype="float32", remat=False, attn_chunk=128)
+    ws1 = attention_working_set_bytes(Bb, S_big, cfg_big.num_heads,
+                                      cfg_big.resolved_head_dim,
+                                      chunk=cfg_big.attn_chunk, cp=1)
+    ws4 = attention_working_set_bytes(Bb, S_big, cfg_big.num_heads,
+                                      cfg_big.resolved_head_dim,
+                                      chunk=cfg_big.attn_chunk, cp=4)
+    budget = (ws1 + ws4) // 2
+    refused = False
+    try:
+        check_attention_budget(budget, Bb, S_big, cfg_big.num_heads,
+                               cfg_big.resolved_head_dim,
+                               chunk=cfg_big.attn_chunk, cp=1)
+    except ValueError as e:
+        refused = True
+        print(f"# refused at cp=1 as intended: {e}", flush=True)
+    assert refused, "budget accepted the full-sequence working set"
+    check_attention_budget(budget, Bb, S_big, cfg_big.num_heads,
+                           cfg_big.resolved_head_dim,
+                           chunk=cfg_big.attn_chunk, cp=4)
+    pol4 = Policy(mesh=compat.make_mesh((1, 4, 2), ("data", "ctx", "model")),
+                  ctx_axis="ctx")
+    step4 = jax.jit(build_train_step(cfg_big, pol4, opt))
+    big = {"tokens": jax.random.randint(key, (Bb, S_big), 0, 256),
+           "labels": jax.random.randint(jax.random.fold_in(key, 2),
+                                        (Bb, S_big), 0, 256)}
+    state4 = init_train_state(cfg_big, init_params(cfg_big,
+                                                   jax.random.PRNGKey(1)), opt)
+    t0 = time.perf_counter()
+    state4, m4 = step4(state4, big)
+    jax.block_until_ready(m4["loss"])
+    us = (time.perf_counter() - t0) * 1e6
+    assert np.isfinite(float(m4["loss"]))
+    emit("ring_attention/long_ctx_refused_cp1_trains_cp4", us,
+         f"S={S_big};ws_cp1_MiB={ws1/2**20:.2f};ws_cp4_MiB={ws4/2**20:.2f};"
+         f"budget_MiB={budget/2**20:.2f};loss={float(m4['loss']):.4f}",
+         seq_len=S_big, ws_cp1_bytes=ws1, ws_cp4_bytes=ws4,
+         budget_bytes=budget, refused_at_cp1=True,
+         loss=float(m4["loss"]))
 
 
 def bench_train_micro():
@@ -407,6 +573,7 @@ BENCHES = {
     "fused_vs_unfused": bench_fused_vs_unfused,
     "pipeline_schedules": bench_pipeline_schedules,
     "hybrid_3d": bench_hybrid_3d,
+    "ring_attention": bench_ring_attention,
     "train_micro": bench_train_micro,
 }
 
@@ -414,12 +581,28 @@ BENCHES = {
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable perf artifact "
+                         "(BENCH_5.json in CI)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()
     print(f"# {len(ROWS)} rows OK", flush=True)
+    if args.json:
+        dev = jax.devices()[0]
+        meta = {
+            "schema": "repro-bench-v1",
+            "jax_version": jax.__version__,
+            "device_count": len(jax.devices()),
+            "device_kind": getattr(dev, "device_kind", str(dev.platform)),
+            "platform": dev.platform,
+            "benches": names,
+        }
+        with open(args.json, "w") as f:
+            json.dump({"meta": meta, "rows": ROWS}, f, indent=1)
+        print(f"# wrote {args.json} ({len(ROWS)} rows)", flush=True)
 
 
 if __name__ == "__main__":

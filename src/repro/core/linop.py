@@ -66,6 +66,7 @@ __all__ = [
     "ReduceScatter",
     "AllToAll",
     "SendRecv",
+    "KVRingShift",
     "BatchScatter",
     "GradSumReduce",
     "HaloExchange",
@@ -304,6 +305,43 @@ class SendRecv(LinearOp):
 
     def _adjoint(self):
         return SendRecv(self.axis, -self.offset)
+
+    def in_spec(self, rank):
+        return _axis_at(self.axis, 0, rank)
+
+    def out_spec(self, rank):
+        return _axis_at(self.axis, 0, rank)
+
+
+@dataclass(frozen=True)
+class KVRingShift(LinearOp):
+    """Cyclic ring shift by ``offset`` around ``axis`` (paper §3; DESIGN §6).
+
+    The PERIODIC sibling of :class:`SendRecv`: every worker sends its
+    realization ``offset`` positions around the ring and receives one from
+    the opposite neighbour — a (block) permutation matrix, hence orthogonal.
+    Adjoint: the inverse permutation, ``KVRingShift(axis, -offset)`` — the
+    reverse ring.  This is the KV-shard rotation of ring attention
+    (``core/ring_attention.py``): the forward pass rotates K/V shards one
+    hop per step around the ``ctx`` mesh axis, and AD composes the
+    registered reverse-ring adjoints into the backward rotation.  Eq. 13-
+    checked on 1-D and 4-D meshes (tests/md/test_linop.py) and sampled by
+    the property fuzzer (tests/md/test_adjoint_property.py).
+
+    >>> KVRingShift("ctx", 1).T == KVRingShift("ctx", -1)
+    True
+    >>> (KVRingShift("ctx", 2).T).T == KVRingShift("ctx", 2)
+    True
+    """
+
+    axis: str
+    offset: int = 1
+
+    def __call__(self, x):
+        return prim.ring_shift(x, self.axis, self.offset)
+
+    def _adjoint(self):
+        return KVRingShift(self.axis, -self.offset)
 
     def in_spec(self, rank):
         return _axis_at(self.axis, 0, rank)

@@ -291,7 +291,11 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
                 ``launch.make_hybrid_mesh``), microbatch inputs must be
                 sharded over it (``Partitioned(None, "data")`` on the
                 per-microbatch batch dim) and loss/grads are averaged over
-                replicas inside the region.
+                replicas inside the region.  A live ``policy.ctx_axis``
+                (DESIGN §6) is treated the same way along the SEQUENCE
+                dim: inputs declare ``Partitioned(None, "data", "ctx")``,
+                stage bodies ring-attend over the ctx axis, and the ctx
+                psum joins the drain-tail reductions (scale 1/(M*dp*cp)).
       schedule: a :class:`Schedule` (its stage count must equal the pipe
                 axis size).
       params_parts: pytree of ``Partitioned`` declarations matching a
@@ -330,6 +334,16 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
     data_axis = policy.active_data_axis
     dp_axes = (data_axis,) if data_axis else ()
     dp = policy.axis_size(data_axis) if data_axis else 1
+    # Context parallelism (DESIGN §6) mirrors the data axis: every ctx rank
+    # drives the same schedule on its own SEQUENCE shard of every
+    # microbatch (the region in-boundary restricts the seq dim over ctx;
+    # attention inside stage bodies rings over it), its per-shard loss is
+    # the local token mean and its gradients are per-shard CONTRIBUTIONS —
+    # so ctx joins every reduction the data axis joins, and cp=1
+    # degenerates identically (active_ctx_axis is None).
+    ctx_axis = policy.active_ctx_axis
+    cx_axes = (ctx_axis,) if ctx_axis else ()
+    cp = policy.axis_size(ctx_axis) if ctx_axis else 1
     boundary = StageBoundary(pipe_axis)          # forward send
     boundary_T = boundary.T                      # adjoint: backward send
 
@@ -414,21 +428,23 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
 
         carry, _ = jax.lax.scan(tick, carry, (ops, mbs, recv_f, recv_b))
 
-        inv_m = 1.0 / (M * dp)
+        inv_m = 1.0 / (M * dp * cp)
         psum_tree = lambda tree, axes: jax.tree_util.tree_map(
             lambda g: jax.lax.psum(g, axes), tree)
         # Only the owning stage accumulated pre/post/loss; collect over pipe
-        # (plus any contribution-form model axes — DESIGN §2.1).  With a data
-        # axis every reduction ALSO sums the per-replica contributions — the
-        # DP gradient sum-reduce (Broadcast* = SumReduce, Eq. 9), placed at
-        # the tail of the drain inside this same region (DESIGN §5).
+        # (plus any contribution-form model axes — DESIGN §2.1).  With a
+        # data and/or ctx axis every reduction ALSO sums the per-replica /
+        # per-sequence-shard contributions — the DP gradient sum-reduce
+        # (Broadcast* = SumReduce, Eq. 9) and its ctx sibling (DESIGN §6),
+        # placed at the tail of the drain inside this same region.
+        rep_axes = dp_axes + cx_axes
         g_pre = psum_tree(carry["g_pre"],
-                          (pipe_axis,) + dp_axes + tuple(pre_psum_axes))
+                          (pipe_axis,) + rep_axes + tuple(pre_psum_axes))
         g_post = psum_tree(carry["g_post"],
-                           (pipe_axis,) + dp_axes + tuple(post_psum_axes))
-        g_stage = (psum_tree(carry["g_stage"], dp_axes) if dp_axes
+                           (pipe_axis,) + rep_axes + tuple(post_psum_axes))
+        g_stage = (psum_tree(carry["g_stage"], rep_axes) if rep_axes
                    else carry["g_stage"])
-        loss = jax.lax.psum(carry["loss"], (pipe_axis,) + dp_axes) * inv_m
+        loss = jax.lax.psum(carry["loss"], (pipe_axis,) + rep_axes) * inv_m
         scale = partial(jax.tree_util.tree_map, lambda g: g * inv_m)
         grads = {
             "pre": scale(g_pre),

@@ -42,6 +42,7 @@ __all__ = [
     "reduce_scatter",
     "all_to_all",
     "send_recv",
+    "ring_shift",
     "batch_scatter",
     "grad_sum_reduce",
     "halo_exchange",
@@ -266,6 +267,40 @@ def _send_recv_bwd(axis_name, offset, _, g):
 
 
 send_recv.defvjp(_send_recv_fwd, _send_recv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Cyclic ring shift: the PERIODIC sibling of send_recv (paper §3).  A cyclic
+# shift is a permutation matrix — orthogonal — so its adjoint is its inverse:
+# the reverse rotation.  This is the data movement of ring attention
+# (core/ring_attention.py): KV shards rotate around the ``ctx`` axis, and
+# the backward pass rotates the KV cotangents the other way.
+# ---------------------------------------------------------------------------
+
+def _ring_perm(size: int, offset: int) -> list[tuple[int, int]]:
+    return [(i, (i + offset) % size) for i in range(size)]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ring_shift(x: jax.Array, axis_name, offset: int) -> jax.Array:
+    """Rotate each worker's realization ``offset`` positions around the ring
+    (periodic — every worker both sends and receives; no zeros appear).
+    Adjoint: the reverse rotation, ``ring_shift(axis, -offset)``."""
+    size = compat.axis_size(axis_name)
+    return jax.lax.ppermute(x, axis_name, _ring_perm(size, offset))
+
+
+def _ring_shift_fwd(x, axis_name, offset):
+    return ring_shift(x, axis_name, offset), None
+
+
+def _ring_shift_bwd(axis_name, offset, _, g):
+    # A cyclic shift is orthogonal: P* = P^{-1} = rotate by -offset.
+    size = compat.axis_size(axis_name)
+    return (jax.lax.ppermute(g, axis_name, _ring_perm(size, -offset)),)
+
+
+ring_shift.defvjp(_ring_shift_fwd, _ring_shift_bwd)
 
 
 # ---------------------------------------------------------------------------

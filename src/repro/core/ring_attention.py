@@ -1,0 +1,263 @@
+"""Ring attention: context parallelism as adjoint ring operators (DESIGN §6).
+
+Training attention was the one place the repo still un-sharded a tensor to
+compute: the SP residual stream is sequence-sharded, but the score
+contraction wants every key/value against every query, so the GSPMD path
+all-gathers the full sequence onto every device (the SP->TP transition in
+``models/attention.py``) — per-device working set and comm volume scale
+with the GLOBAL sequence length.  The paper's thesis says the gather is not
+necessary: attention over a distributed sequence decomposes into a ring of
+linear data-movement operators composed with local online-softmax blocks.
+
+The algebra (DESIGN §6):
+
+- q, k, v stay sequence-sharded over the ``ctx`` mesh axis (worker r owns
+  rows ``[r*S_loc, (r+1)*S_loc)`` of the global sequence).
+- Each hop applies the cyclic :class:`~repro.core.linop.KVRingShift`
+  operator to the K/V shards (``primitives.ring_shift`` — a permutation
+  matrix, adjoint = the reverse rotation) and contracts the LOCAL q shard
+  against the visiting KV shard.
+- The per-hop partials merge through the online-softmax running stats
+  ``(m, l, acc)`` — a reparametrization of a sum of linear(-ly combined)
+  partials, so hop order only permutes fp32 rounding.
+- The backward pass is the reverse ring: AD composes the registered
+  reverse-rotation adjoints of the hop ppermutes with the transposed local
+  contractions (exactly the structure of ``overlap.py``'s ring
+  collective-matmuls).  Inside the pipeline executor the whole routine
+  lives in the stage body, so the re-vjp-at-saved-input backward replays
+  the same ring in reverse with NO extra scheduling machinery.
+
+Rotation-aware causal masking: with contiguous sequence shards the hop
+offset determines the block type.  At hop t worker r holds the shard that
+started at ``src = (r - t) mod cp``::
+
+      src < r   "full"     every kv position precedes every q position
+      src == r  "partial"  the diagonal block — triangular causal mask
+      src > r   "skip"     every kv position follows every q position
+
+All three cases are ONE predicate on global positions,
+``q_pos >= kv_pos`` (the mask is all-ones / triangular / all-zeros
+respectively), evaluated with ``jnp.where`` so the trace — including the
+hop collectives — is identical on every worker: collectives never sit in
+worker-divergent branches (SPMD uniformity; the TPU flash kernel
+additionally *skips* "skip" blocks with ``pl.when``, a per-core compute
+predicate that involves no collective).  The hop order puts the diagonal
+block FIRST, so the running max ``m`` is finite before any fully-masked
+block contributes ``exp(NEG_INF - m) == 0``.
+
+Collectives run inside ``shard_map`` bodies; call :func:`ring_attention`
+from SPMD code (a dist_jit region, a pipeline stage body) and
+:func:`ring_attention_gspmd` from GSPMD code (``models/attention.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import primitives as prim
+
+__all__ = [
+    "ring_attention",
+    "ring_attention_gspmd",
+    "attention_working_set_bytes",
+    "check_attention_budget",
+]
+
+NEG_INF = -1e30
+
+
+def ring_attention(q, k, v, axis_name, *, chunk: int, causal: bool = True,
+                   unroll: bool = False):
+    """Blockwise online-softmax attention over sequence shards on a ring.
+
+    SPMD-local (call inside a shard_map region with ``axis_name`` live).
+    q: (B, Sq_loc, H, hd); k, v: (B, Skv_loc, KH, hd) with H % KH == 0 —
+    the worker's CONTIGUOUS sequence shards (worker r owns global rows
+    ``r*S_loc + [0, S_loc)``; positions are assumed row-major, which is how
+    every train path builds them).  Returns (B, Sq_loc, H, hd), fp32
+    accumulation, identical (up to fp32 reduction order) to
+    ``blockwise_attention`` on the gathered sequence.
+
+    One hop per ctx rank: contract local q against the visiting KV shard
+    (an inner scan over ``chunk``-sized KV blocks, merging the (m, l, acc)
+    running stats), then rotate K/V one position with ``ring_shift`` — the
+    KVRingShift operator, whose adjoint (the reverse rotation) AD composes
+    into the backward ring.  The hop loop is unrolled Python (ctx size is
+    static), so each hop's ppermute is independent of the previous hop's
+    contraction and XLA's latency-hiding scheduler can overlap transfer
+    with compute, exactly as in ``overlap.py``.  GQA rotates the small
+    KH-head shards and repeats to H query heads locally per hop (the repeat
+    is a broadcast — fused, never materialized in HBM).
+    """
+    cp = prim.axis_size(axis_name)
+    r = jax.lax.axis_index(axis_name)
+    B, Sq, H, hd = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    group = H // KH
+    scale = 1.0 / np.sqrt(hd)
+    chunk = min(chunk, Skv)
+    pad = (-Skv) % chunk
+    nkv = (Skv + pad) // chunk
+
+    q_pos = r * Sq + jnp.arange(Sq)             # global rows owned here
+    local_pos = jnp.arange(chunk)
+
+    def blocks(kv):
+        """(B, Skv, KH, hd) -> (nkv, B, chunk, H, hd) chunked + GQA-repeated."""
+        if pad:
+            kv = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if group > 1:
+            kv = jnp.repeat(kv, group, axis=2)
+        return kv.reshape(B, nkv, chunk, H, hd).swapaxes(0, 1)
+
+    def hop(carry, k_cur, v_cur, src):
+        """Online-softmax pass of local q over one visiting KV shard."""
+        kv_base = src * Skv
+
+        def step(c, inputs):
+            m, l, acc = c
+            kc, vc, j = inputs
+            s = jnp.einsum("bqhd,bchd->bqhc", q, kc,
+                           preferred_element_type=jnp.float32) * scale
+            lp = j * chunk + local_pos
+            mask = lp[None, :] < Skv                       # padding mask
+            if causal:
+                # the full/partial/skip offset table collapses to ONE
+                # global-position predicate (module docstring).
+                mask = mask & (q_pos[:, None] >= (kv_base + lp)[None, :])
+            else:
+                mask = jnp.broadcast_to(mask, (Sq, chunk))
+            s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhc,bchd->bqhd", p.astype(q.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        carry, _ = jax.lax.scan(
+            step, carry, (blocks(k_cur), blocks(v_cur), jnp.arange(nkv)),
+            unroll=unroll)
+        return carry
+
+    m0 = jnp.full((B, Sq, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, H), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    carry = (m0, l0, acc0)
+    k_cur, v_cur = k, v
+    for t in range(cp):
+        # hop t: worker r holds the shard that started at rank (r - t) % cp
+        # (each rotation moves shard i to worker i + 1).  t = 0 is the
+        # diagonal block — processed FIRST so the running max is finite
+        # before fully-masked blocks arrive.
+        carry = hop(carry, k_cur, v_cur, (r - t) % cp)
+        if t < cp - 1:
+            k_cur = prim.ring_shift(k_cur, axis_name, 1)
+            v_cur = prim.ring_shift(v_cur, axis_name, 1)
+    m, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def ring_attention_gspmd(q, k, v, policy, *, chunk: int, causal: bool = True,
+                         unroll: bool = False):
+    """GSPMD-side dispatch: wrap :func:`ring_attention` in ONE shard_map.
+
+    q: (B, S, H, hd); k, v: (B, S, KH, hd) — GLOBAL arrays (the caller sits
+    outside any manual region, e.g. ``models/attention.py``).  The sequence
+    dim rides the policy's ``ctx`` axis at the region boundary — this
+    boundary restriction replaces the SP->TP sequence all-gather, which is
+    the whole point: the compiled module contains collective-permutes on
+    the ctx axis and NO sequence-dim all-gather
+    (``roofline/hlo_profile.py::seq_dim_allgather_bytes`` asserts this).
+
+    Heads ride the model axis when they divide it; GQA KV heads that do NOT
+    divide the model axis are repeated to the full H query heads out here
+    so the visiting shards align with the local q-head block (rotation
+    payload grows by the group factor — correctness over comm volume).
+
+    Raises ``ValueError`` at trace time when S is not divisible by the ctx
+    axis size (same contract as ``BatchScatter``: a clamped shard would
+    silently drop trailing positions).
+    """
+    ctx = policy.active_ctx_axis
+    if ctx is None:
+        raise ValueError("ring_attention_gspmd needs a live ctx axis "
+                         "(policy.active_ctx_axis is None)")
+    cp = policy.ctx_size
+    B, S, H, hd = q.shape
+    KH = k.shape[2]
+    if S % cp or k.shape[1] % cp:
+        raise ValueError(
+            f"ring attention: sequence length {S} (kv {k.shape[1]}) not "
+            f"divisible by ctx axis {ctx!r} size {cp} — a clamped shard "
+            f"would silently drop the trailing positions")
+    tp = policy.model_size
+    heads = policy.phys("heads") if (policy.model_axis and H % tp == 0) else None
+    if heads is not None and KH % tp:
+        group = H // KH
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    kv_heads = heads if (heads is not None and k.shape[2] % tp == 0) else None
+    batch = policy.phys("batch")
+    q_spec = P(batch, ctx, heads, None)
+    kv_spec = P(batch, ctx, kv_heads, None)
+    f = prim.smap(
+        lambda qq, kk, vv: ring_attention(qq, kk, vv, ctx, chunk=chunk,
+                                          causal=causal, unroll=unroll),
+        policy.mesh, (q_spec, kv_spec, kv_spec), q_spec)
+    return f(q, k, v)
+
+
+def attention_working_set_bytes(batch: int, seq: int, heads: int,
+                                head_dim: int, *, chunk: int, cp: int = 1,
+                                dtype_bytes: int = 4) -> int:
+    """Per-device attention working set of the blockwise/ring path (bytes).
+
+    The linear-algebraic memory model of ``core/memory.py`` applied to the
+    attention region: q/k/v/out shards + the fp32 (m, l, acc) running stats
+    + one (S_loc x chunk) score tile per head.  Everything scales with the
+    LOCAL sequence ``S/cp`` — the ~cp-fold working-set reduction context
+    parallelism buys at fixed global S.
+    """
+    s_loc = -(-seq // cp)
+    c = min(chunk, s_loc)
+    qkv_out = 4 * batch * s_loc * heads * head_dim * dtype_bytes
+    stats = (2 * batch * s_loc * heads +                 # m, l (fp32)
+             batch * s_loc * heads * head_dim) * 4       # acc (fp32)
+    scores = batch * s_loc * heads * c * 4               # one fp32 tile
+    return qkv_out + stats + scores
+
+
+def check_attention_budget(budget_bytes: int, batch: int, seq: int,
+                           heads: int, head_dim: int, *, chunk: int,
+                           cp: int = 1, dtype_bytes: int = 4) -> int:
+    """Refuse an attention configuration whose working set exceeds budget.
+
+    Returns the estimated per-device bytes when they fit; raises
+    ``ValueError`` otherwise, naming the context-parallel degree that
+    would fit — the launch-time guard behind the "a context length that is
+    refused on 1 device trains at cp=4" demonstration
+    (``benchmarks/run.py::bench_ring_attention``).
+    """
+    need = attention_working_set_bytes(batch, seq, heads, head_dim,
+                                       chunk=chunk, cp=cp,
+                                       dtype_bytes=dtype_bytes)
+    if need > budget_bytes:
+        fit = cp
+        while fit <= seq and attention_working_set_bytes(
+                batch, seq, heads, head_dim, chunk=chunk, cp=fit,
+                dtype_bytes=dtype_bytes) > budget_bytes:
+            fit *= 2
+        hint = (f"shard the sequence over a ctx axis (cp>={fit} fits)"
+                if fit <= seq else
+                "no context-parallel degree fits this budget")
+        raise ValueError(
+            f"attention working set ~{need/2**20:.1f} MiB/device at cp={cp} "
+            f"exceeds the {budget_bytes/2**20:.1f} MiB budget; {hint}")
+    return need

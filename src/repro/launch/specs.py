@@ -95,17 +95,35 @@ def replica_assignment(global_batch: int, dp: int,
     return [range(r * b, (r + 1) * b) for r in range(dp)]
 
 
+def context_assignment(seq_len: int, cp: int) -> list[range]:
+    """Per-ctx-rank position ranges of the sequence under context
+    parallelism (DESIGN §6): rank c owns the CONTIGUOUS rows
+    ``[c*S/cp, (c+1)*S/cp)`` of every microbatch — the shards ring
+    attention's KVRingShift rotates.  A planning/reporting helper
+    mirroring ``replica_assignment`` for the data axis; enforces the same
+    divisibility contract the train step raises on."""
+    if seq_len % cp:
+        raise ValueError(
+            f"sequence length {seq_len} not divisible by cp={cp} — a "
+            f"clamped shard would silently drop the trailing positions")
+    s = seq_len // cp
+    return [range(c * s, (c + 1) * s) for c in range(cp)]
+
+
 def hybrid_input_specs(cfg: ModelConfig, shape_name: str,
-                       num_microbatches: int, dp: int) -> tuple[dict, object]:
-    """Microbatched (xs, labels) specs for the hybrid DP x pipe x tensor
-    executor: the SAME host-side (M, B/M, S) cut as the pipeline — the
-    per-replica restriction to (M, B/(M*dp), S) happens at the region
-    boundary (``Partitioned(None, "data")``), not in the host arrays —
-    plus the B % (M*dp) divisibility check the train step enforces."""
+                       num_microbatches: int, dp: int,
+                       cp: int = 1) -> tuple[dict, object]:
+    """Microbatched (xs, labels) specs for the hybrid DP x pipe x ctx x
+    tensor executor: the SAME host-side (M, B/M, S) cut as the pipeline —
+    the per-replica restriction to (M, B/(M*dp), S/cp) happens at the
+    region boundary (``Partitioned(None, "data", "ctx")``), not in the
+    host arrays — plus the B % (M*dp) and S % cp divisibility checks the
+    train step enforces."""
     cell = SHAPES[shape_name]
     if cell.kind != "train":
         raise ValueError(f"hybrid specs need a train cell, got {cell.kind}")
     replica_assignment(cell.global_batch, dp, num_microbatches)
+    context_assignment(cell.seq_len, cp)
     return pipeline_input_specs(cfg, shape_name, num_microbatches)
 
 

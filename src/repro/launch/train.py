@@ -3,12 +3,14 @@
     PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --reduced \
         --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
 
-Hybrid DP x pipe x tensor (DESIGN §5) — any (dp, pp, tp) factorization of
-the visible devices:
+Hybrid DP x pipe x ctx x tensor (DESIGN §5-6) — any (dp, pp, cp, tp)
+factorization of the visible devices; cp > 1 turns on ring-attention
+context parallelism (the sequence is sharded over the ctx axis and KV
+shards rotate, so no device ever holds the full sequence):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --reduced \
-        --hybrid-mesh 2,2,2 --microbatches 4 --steps 20 --batch 16
+        --hybrid-mesh 2,1,2,2 --microbatches 4 --steps 20 --batch 16
 
 On this CPU container use --reduced (tiny same-family config); on real
 hardware drop it and point the mesh at the pod.  The loop is the fault-
@@ -45,13 +47,19 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--hybrid-mesh", default=None, metavar="DP,PP,TP",
-                    help="run the hybrid 3-D executor on a (data, pipe, "
-                         "model) mesh with this factorization")
+    ap.add_argument("--hybrid-mesh", default=None, metavar="DP,PP,CP,TP",
+                    help="run the hybrid executor on a (data, pipe, ctx, "
+                         "model) mesh with this factorization; CP is the "
+                         "ring-attention context-parallel degree (a 3-value "
+                         "DP,PP,TP form is accepted with CP=1)")
     ap.add_argument("--microbatches", type=int, default=4,
                     help="pipeline microbatches per step (hybrid mesh only)")
     ap.add_argument("--schedule", default="1f1b",
                     choices=("1f1b", "fill_drain"))
+    ap.add_argument("--use-flash", action="store_true",
+                    help="route train attention through kernels.ops."
+                         "flash_attention (REPRO_KERNEL_IMPL selects "
+                         "xla/pallas/pallas_interpret); GSPMD path only")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -60,11 +68,22 @@ def main():
     n_dev = len(jax.devices())
     hybrid = None
     if args.hybrid_mesh:
-        dp, pp, tp = (int(x) for x in args.hybrid_mesh.split(","))
-        if dp * pp * tp != n_dev:
-            raise SystemExit(f"--hybrid-mesh {dp}x{pp}x{tp} != {n_dev} devices")
-        hybrid = (dp, pp, tp)
-        mesh = make_hybrid_mesh(dp, pp, tp)
+        parts = [int(x) for x in args.hybrid_mesh.split(",")]
+        if len(parts) == 3:          # legacy DP,PP,TP form
+            parts = parts[:2] + [1] + parts[2:]
+        if len(parts) != 4:
+            raise SystemExit("--hybrid-mesh wants DP,PP,CP,TP (or DP,PP,TP)")
+        dp, pp, cp, tp = parts
+        if dp * pp * cp * tp != n_dev:
+            raise SystemExit(
+                f"--hybrid-mesh {dp}x{pp}x{cp}x{tp} != {n_dev} devices")
+        if args.seq % cp:
+            raise SystemExit(f"--seq {args.seq} not divisible by CP={cp}")
+        if args.use_flash:
+            raise SystemExit("--use-flash is GSPMD-only: the pipeline/ctx "
+                             "executor owns attention dispatch")
+        hybrid = (dp, pp, cp, tp)
+        mesh = make_hybrid_mesh(dp, pp, cp, tp)
         policy = Policy.for_mesh(mesh, explicit_tp=tp > 1)
     else:
         mesh = make_host_mesh((n_dev, 1))
@@ -80,7 +99,8 @@ def main():
             cfg, policy, opt, num_microbatches=args.microbatches,
             schedule=args.schedule))
     else:
-        step = jax.jit(build_train_step(cfg, policy, opt))
+        step = jax.jit(build_train_step(cfg, policy, opt,
+                                        use_flash=args.use_flash))
 
     def make_state():
         if hybrid:

@@ -131,15 +131,21 @@ def decode_attention(q, k_cache, v_cache, cache_len):
 def attention_block_tp(p, h, cfg, policy, *, positions):
     """Explicit-TP attention sub-layer on LOCAL shards (inside dist_jit).
 
-    h: (B_loc, S, d_model/tp) — the residual stream is FEATURE-sharded over
-    the model axis, so the qkv projections are gather-affines (paper's
+    h: (B_loc, S_loc, d_model/tp) — the residual stream is FEATURE-sharded
+    over the model axis, so the qkv projections are gather-affines (paper's
     partitioned broadcast B fused with the GEMM as a ring collective-matmul
     when policy.explicit_tp) and the output projection is a scatter-affine
     (GEMM fused with the adjoint reduce-scatter R).  Heads stay sharded in
-    between; attention itself is head-local.  Train/prefill math only (no
-    cache plumbing here).
+    between; attention itself is head-local — UNLESS the policy carries a
+    live ctx axis, in which case S_loc is a sequence shard and the score
+    contraction runs the KVRingShift ring (core/ring_attention.py): the
+    ctx and model axes compose inside one region, ring collective-matmuls
+    on ``model`` around ring attention on ``ctx``.  ``positions`` must
+    then carry GLOBAL positions (the caller offsets by the ctx rank).
+    Train/prefill math only (no cache plumbing here).
     """
     from repro.core import layers as L
+    from repro.core.ring_attention import ring_attention
 
     ax = policy.model_axis
     tp = policy.model_size
@@ -149,21 +155,33 @@ def attention_block_tp(p, h, cfg, policy, *, positions):
     v = _split_heads(L.affine_gather(h, p["wv"], axis=ax), cfg.num_kv_heads // tp, hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    out = blockwise_attention(q, k, v, chunk=cfg.attn_chunk,
-                              unroll=cfg.unroll_scans)
+    ctx = policy.active_ctx_axis
+    if ctx is not None:
+        out = ring_attention(q, k, v, ctx, chunk=cfg.attn_chunk,
+                             unroll=cfg.unroll_scans)
+    else:
+        out = blockwise_attention(q, k, v, chunk=cfg.attn_chunk,
+                                  unroll=cfg.unroll_scans)
     out = out.reshape(out.shape[0], out.shape[1], (cfg.num_heads // tp) * hd)
     return L.affine_scatter(out, p["wo"], axis=ax)
 
 
 def attention_block(p, x, cfg, policy, *, positions, mode, cache=None,
-                    cache_len=None, use_flash: bool = False):
+                    cache_len=None, use_flash: bool = False, ctx_axis=None):
     """Full attention sub-layer: qkv proj -> rope -> attend -> out proj.
 
     x: (B, S, d).  Returns (out, new_cache).
     In train/prefill ``cache`` is None / being built; in decode S == 1.
     TP: heads sharded over the model axis (the paper's affine P_fo); under
     SP the incoming residual is seq-sharded and GSPMD inserts the
-    seq->heads repartition (the paper's generalized all-to-all).
+    seq->heads repartition (the paper's generalized all-to-all) — UNLESS
+    context parallelism is live (``policy.active_ctx_axis``), in which
+    case the train path keeps q/k/v sequence-sharded and dispatches to the
+    KVRingShift ring (``core/ring_attention.py``): no sequence all-gather
+    reaches the HLO.  ``ctx_axis`` is the SPMD-side variant of the same
+    dispatch: when the caller already sits inside a manual region with a
+    live ctx axis (the pipeline stage body), x is the LOCAL shard,
+    ``positions`` carry global positions, and the ring runs directly.
     """
     hd = cfg.resolved_head_dim
     q = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wq"]), cfg.num_heads, hd)
@@ -172,6 +190,13 @@ def attention_block(p, x, cfg, policy, *, positions, mode, cache=None,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
+    ring_gspmd = (policy is not None and mode == "train"
+                  and policy.active_ctx_axis is not None and ctx_axis is None)
+    if (ring_gspmd or ctx_axis is not None) and use_flash:
+        raise ValueError(
+            "use_flash is not supported with context parallelism: the "
+            "Pallas kernel owns the whole (gathered) KV sequence; drop "
+            "--use-flash or the ctx axis")
     if policy is not None:
         if mode == "decode":
             if getattr(policy, "kv_layout", "kvdim") == "kvseq":
@@ -184,13 +209,27 @@ def attention_block(p, x, cfg, policy, *, positions, mode, cache=None,
                 # head_dim sharded to match the cache: the score
                 # contraction psums partials over the model axis.
                 q = policy.constrain(q, "batch", None, None, "kvdim")
+        elif ring_gspmd:
+            # ring path: q/k/v stay sequence-sharded over the ctx axis;
+            # the shard_map boundary below replaces the SP->TP gather.
+            pass
         else:
             # heads over model axis; seq gathered (the SP->TP transition)
             q = policy.constrain(q, "batch", None, "heads", None)
 
     new_cache = None
     if mode in ("train", "prefill"):
-        if use_flash:
+        if ctx_axis is not None and mode == "train":
+            # SPMD-side ring: already inside a manual region (pipeline
+            # stage body) with local sequence shards.
+            from repro.core.ring_attention import ring_attention
+            out = ring_attention(q, k, v, ctx_axis, chunk=cfg.attn_chunk,
+                                 unroll=cfg.unroll_scans)
+        elif ring_gspmd:
+            from repro.core.ring_attention import ring_attention_gspmd
+            out = ring_attention_gspmd(q, k, v, policy, chunk=cfg.attn_chunk,
+                                       unroll=cfg.unroll_scans)
+        elif use_flash:
             from repro.kernels import ops as kops
             out = kops.flash_attention(q, k, v, causal=True)
         else:

@@ -82,7 +82,16 @@ def _tp_sublayer_body(p, x, positions, cfg, policy, ffn):
 def _tp_sublayer_apply(p, x, cfg, policy, *, positions, ffn):
     """dist_jit wrapper of the fused sublayer: logical Partitioned specs at
     the boundary (residual features over the model axis — the repartition
-    from/to the sequence-sharded stream is inserted by GSPMD outside)."""
+    from/to the sequence-sharded stream is inserted by GSPMD outside).
+    With a live ctx axis the sequence dim ALSO stays sharded at the
+    boundary ("ctx" resolves replicated otherwise), so the region composes
+    ring attention on ``ctx`` with the ring collective-matmuls on
+    ``model`` and no sequence gather reaches the HLO."""
+    if policy.active_ctx_axis and x.shape[1] % policy.ctx_size:
+        raise ValueError(
+            f"sequence length {x.shape[1]} not divisible by ctx axis size "
+            f"{policy.ctx_size} — a clamped shard would silently drop the "
+            f"trailing positions")
     m = Partitioned("model")
     col = Partitioned(None, "model")   # (in, out-shard) projections
     row = Partitioned("model", None)   # (in-shard, out) projections
@@ -94,21 +103,25 @@ def _tp_sublayer_apply(p, x, cfg, policy, *, positions, ffn):
         p_parts["mlp"] = {k: (row if k == "w_down" else col) for k in p["mlp"]}
         p_in["norm_ffn"] = p["norm_ffn"]
         p_in["mlp"] = p["mlp"]
-    xp = Partitioned("batch", None, "model")
+    xp = Partitioned("batch", "ctx", "model")
 
     def body(pp, xx, pos):
         return _tp_sublayer_body(pp, xx, pos, cfg, policy, ffn)
 
     return dist_jit(body, policy,
-                    (p_parts, xp, Partitioned("batch", None)), xp,
+                    (p_parts, xp, Partitioned("batch", "ctx")), xp,
                     jit=False)(p_in, x, positions)
 
 
 def sublayer_apply(p, x, cfg, policy, layer: int, *, positions, mode,
-                   cache=None, cache_len=None, use_flash=False):
+                   cache=None, cache_len=None, use_flash=False,
+                   ctx_axis=None):
     """One decoder layer: x + mixer(norm(x)); x + ffn(norm(x)).
 
-    Returns (x, new_cache, aux_loss)."""
+    Returns (x, new_cache, aux_loss).  ``ctx_axis``: live ctx mesh axis
+    when called on LOCAL shards inside a manual region (the pipeline stage
+    body under context parallelism) — attention then rings over it instead
+    of attending locally; ``positions`` must carry global positions."""
     mixer, ffn = layer_kinds(cfg, layer)
     aux = jnp.zeros((), jnp.float32)
 
@@ -122,7 +135,8 @@ def sublayer_apply(p, x, cfg, policy, layer: int, *, positions, mode,
     if mixer == "attn":
         out, new_cache = attention_block(
             p["attn"], h, cfg, policy, positions=positions, mode=mode,
-            cache=cache, cache_len=cache_len, use_flash=use_flash)
+            cache=cache, cache_len=cache_len, use_flash=use_flash,
+            ctx_axis=ctx_axis)
     else:
         out, new_cache = ssm_block(p["ssm"], h, cfg, policy, mode=mode,
                                    cache=cache)
@@ -149,16 +163,21 @@ def pipeline_stage_body(p_stage, x, cfg, policy, *, positions):
     inside the pipeline's shard_map region (core/pipeline.py).
 
     p_stage: this stage's superblocks, stacked ``(n_super_per_stage, ...)``.
-    x: the local activation shard — ``(B_mb, S, d_model/tp)`` feature-sharded
-    when ``policy.explicit_tp`` (the fused ring-TP sublayer bodies run inside
-    the region, so TP collectives compose with the pipe axis), else the full
-    ``(B_mb, S, d_model)`` residual with plain local math.
+    x: the local activation shard — ``(B_mb, S_loc, d_model/tp)``
+    feature-sharded when ``policy.explicit_tp`` (the fused ring-TP sublayer
+    bodies run inside the region, so TP collectives compose with the pipe
+    axis), else the full-feature ``(B_mb, S_loc, d_model)`` residual with
+    plain local math.  Under context parallelism ``S_loc`` is the ctx
+    rank's sequence shard, ``positions`` carry global positions, and
+    attention rings over the ctx axis in BOTH branches (the ctx, pipe and
+    model axes all live in the one region).
 
     Training math only (no caches / flash kernel); each sublayer must be
     TP-fusable under explicit_tp (attention mixer, dense/absent FFN).
     """
     period = cfg.block_period
     explicit = policy is not None and getattr(policy, "explicit_tp", False)
+    ctx_axis = policy.active_ctx_axis if policy is not None else None
 
     def one_superblock(xx, p_blk):
         for i in range(period):
@@ -178,7 +197,8 @@ def pipeline_stage_body(p_stage, x, cfg, policy, *, positions):
                 xx = _tp_sublayer_body(pp, xx, positions, cfg, policy, ffn)
             else:
                 xx, _, _ = sublayer_apply(pp, xx, cfg, None, i,
-                                          positions=positions, mode="train")
+                                          positions=positions, mode="train",
+                                          ctx_axis=ctx_axis)
         return xx, None
 
     x, _ = jax.lax.scan(one_superblock, x, p_stage)

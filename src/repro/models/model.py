@@ -163,8 +163,16 @@ def pipeline_fns(cfg, policy):
         return x
 
     def stage_fn(p_stage, x):
-        B, S = x.shape[:2]
-        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        B, S_loc = x.shape[:2]
+        # Under context parallelism x is the ctx rank's sequence shard:
+        # positions must be GLOBAL (RoPE phases and the ring's causal
+        # offsets both key on them), so offset by the rank's first row.
+        pos0 = 0
+        ctx = policy.active_ctx_axis if policy is not None else None
+        if ctx is not None:
+            pos0 = jax.lax.axis_index(ctx) * S_loc
+        positions = jnp.broadcast_to(pos0 + jnp.arange(S_loc)[None, :],
+                                     (B, S_loc))
         return pipeline_stage_body(p_stage, x, cfg, policy,
                                    positions=positions)
 
@@ -256,7 +264,9 @@ def forward(params, batch, cfg, policy=None, *, mode="train", cache=None,
     else:
         logits = jnp.einsum("bsd,dv->bsv", x, head)
     if policy is not None:
-        # vocab owns the model axis here (seq stays unsharded: 'seq' and
-        # 'vocab' map to the same physical axis).
-        logits = policy.constrain(logits, "batch", None, "vocab")
+        # vocab owns the model axis here; the seq dim stays replicated
+        # under plain SP ('seq' and 'vocab' map to the same physical axis)
+        # but rides the ctx axis under context parallelism — "ctx" resolves
+        # replicated when no ctx axis is live, so cp=1 is unchanged.
+        logits = policy.constrain(logits, "batch", "ctx", "vocab")
     return logits, new_cache, aux

@@ -71,6 +71,88 @@ def opcode_bytes(hlo: str, k: int = 15):
     return rows[:k]
 
 
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "collective-permute", "all-to-all")
+
+# matches sync and async forms (all-gather / all-gather-start) — GPU/TPU
+# backends emit the async pair, CPU the sync op.
+_AG_RE = re.compile(
+    r"=\s*(\w+)\[([0-9,]*)\]\S*\s+all-gather(?:-start)?\(\s*\w+\[([0-9,]*)\]")
+_DIMS_RE = re.compile(r"dimensions=\{(\d+)\}")
+
+
+def _dims(s: str) -> list[int]:
+    return [int(d) for d in s.split(",")] if s else []
+
+
+def collective_inventory(hlo: str) -> dict:
+    """Per-collective-opcode (count, total output bytes) over the module —
+    the coarse comm picture a mesh-factorization change shifts (e.g. CP
+    turns sequence all-gathers into collective-permutes)."""
+    agg = {}
+    for m in _INSTR_RE.finditer(hlo):
+        _, shape_str, opcode = m.groups()
+        base = opcode.removesuffix("-start").removesuffix("-done")
+        if base in _COLLECTIVES:
+            c, b = agg.get(base, (0, 0))
+            agg[base] = (c + 1, b + shape_bytes(shape_str))
+    return agg
+
+
+def seq_dim_allgather_bytes(hlo: str, seq_len: int) -> int:
+    """Total output bytes of all-gathers that gather the SEQUENCE dimension.
+
+    An instruction counts when its gather dimension (the ``dimensions={d}``
+    attribute) reaches ``seq_len`` in the output from a strictly smaller
+    operand dim — the SP->TP sequence gather context parallelism exists to
+    eliminate.  Choose ``seq_len`` distinct from the model's other global
+    dims (d_model, vocab) so the structural test cannot alias.  The CP
+    acceptance assertion is simply ``seq_dim_allgather_bytes(hlo, S) == 0``
+    on the compiled train step (tests/md/test_ring_attention.py,
+    benchmarks/run.py::bench_ring_attention).
+    """
+    total = 0
+    for line in hlo.splitlines():
+        m = _AG_RE.search(line)
+        if not m:
+            continue
+        dtype, out_dims, in_dims = (m.group(1), _dims(m.group(2)),
+                                    _dims(m.group(3)))
+        dm = _DIMS_RE.search(line)
+        if dm is None:
+            continue
+        d = int(dm.group(1))
+        if (d < len(out_dims) and d < len(in_dims)
+                and out_dims[d] == seq_len and in_dims[d] < seq_len):
+            n = _DTYPE_BYTES.get(dtype, 4)
+            for dim in out_dims:
+                n *= dim
+            total += n
+    return total
+
+
+def peak_activation_bytes(hlo: str, min_rank: int = 3) -> int:
+    """Largest single instruction output of rank >= ``min_rank`` (bytes) —
+    a structural stand-in for the attention working set on backends where
+    ``compiled.memory_analysis()`` is unavailable: rank-3+ tensors are the
+    activation-shaped values (q/k/v, score tiles, gathered residuals), and
+    under context parallelism the largest one shrinks ~cp-fold."""
+    peak = 0
+    for m in _INSTR_RE.finditer(hlo):
+        _, shape_str, _ = m.groups()
+        for dtype, dims in _SHAPE_RE.findall(shape_str):
+            if dtype not in _DTYPE_BYTES:
+                continue
+            dd = _dims(dims)
+            if len(dd) < min_rank:
+                continue
+            n = _DTYPE_BYTES[dtype]
+            for d in dd:
+                n *= d
+            peak = max(peak, n)
+    return peak
+
+
 def report(hlo: str, k: int = 20) -> str:
     lines = ["== largest tensors (bytes x count) =="]
     for tot, b, c, opcode, s in top_tensors(hlo, k):

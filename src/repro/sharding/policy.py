@@ -7,7 +7,13 @@ The production mesh is (pod, data, model) (launch/mesh.py).  Logical axes:
                                    3-D meshes shard per-replica microbatches
                                    with it (BatchScatter/GradSumReduce pair,
                                    core/linop.py; DESIGN §5)
-  seq     -> model                sequence parallelism for residuals (SP)
+  seq     -> ctx_axis | model     sequence sharding for residuals: the ctx
+                                   axis when context parallelism is live
+                                   (ring attention, core/ring_attention.py),
+                                   else the SP seq->model overload
+  ctx     -> ctx_axis             context parallelism (sequence ring): KV
+                                   shards rotate with KVRingShift; None when
+                                   the mesh has no live ctx axis (DESIGN §6)
   heads   -> model                tensor parallelism (paper §4 affine P_fo)
   ff      -> model                TP on FFN hidden   (paper §4 affine P_fo)
   experts -> model                expert parallelism (paper all-to-all)
@@ -42,6 +48,9 @@ class Policy:
     pod_axis: str | None = None          # set on the multi-pod mesh
     pipe_axis: str | None = None         # pipeline-parallel stage axis
                                          # (core/pipeline.py; logical "pipe")
+    ctx_axis: str | None = None          # context-parallel sequence-ring axis
+                                         # (core/ring_attention.py; logical
+                                         # "ctx"; see active_ctx_axis)
     fsdp: bool = True                    # ZeRO-3 param sharding over data
     fsdp_over_pod: bool = False          # also shard params over pod axis
     seq_shard: bool = True               # SP: residuals sharded over model
@@ -60,7 +69,20 @@ class Policy:
         shims): logical names resolve only through mesh axis names and
         explicit ``bind`` aliases."""
         names = tuple(mesh.axis_names)
-        if "pipe" in names:
+        if "ctx" in names:
+            # 4-D hybrid mesh (launch.make_hybrid_mesh with cp > 1): the
+            # ctx axis carries ONLY the sequence ring — never alias data or
+            # model onto it.  Assignment of the remaining axes mirrors the
+            # pipe/plain branches below over the ctx-free names.
+            kw.setdefault("ctx_axis", "ctx")
+            rest = tuple(n for n in names if n not in ("pipe", "ctx"))
+            if "pipe" in names:
+                kw.setdefault("pipe_axis", "pipe")
+            else:
+                kw.setdefault("pipe_axis", None)
+            kw.setdefault("model_axis", rest[-1] if rest else None)
+            kw.setdefault("data_axis", rest[0] if len(rest) > 1 else None)
+        elif "pipe" in names:
             # Pipeline mesh: never alias data/model onto the pipe axis, and
             # with a single non-pipe axis there is NO data axis — "batch"
             # must resolve replicated, not onto the TP axis.
@@ -125,7 +147,20 @@ class Policy:
             # (e.g. the default name "data" on a pure (pipe, model) mesh).
             return self.active_data_axis
         if logical == "seq":
+            # Context parallelism takes precedence over the SP seq->model
+            # overload: when a ctx axis is live the residual stream's
+            # sequence dim rides the ring (DESIGN §6), freeing the model
+            # axis for heads/ff/vocab in the same program.
+            ctx = self.active_ctx_axis
+            if ctx:
+                return ctx
             return self.model_axis if self.seq_shard else None
+        if logical == "ctx":
+            # The sequence-ring axis itself (KVRingShift rotations, ring
+            # attention boundary specs).  None — replicated — whenever the
+            # mesh carries no live ctx axis, so ctx-aware declarations
+            # degenerate exactly to today's path at cp=1.
+            return self.active_ctx_axis
         if logical in ("heads", "ff", "experts", "vocab", "kvdim", "kvseq",
                        "model"):
             return self.model_axis
@@ -169,6 +204,28 @@ class Policy:
         if self.data_axis and self.data_axis in self.mesh.axis_names:
             return self.data_axis
         return None
+
+    @property
+    def active_ctx_axis(self) -> str | None:
+        """``ctx_axis`` if it names a LIVE mesh axis of size > 1, else None.
+
+        Mirrors ``active_data_axis`` as the single predicate for "is
+        context parallelism on": ring dispatch in ``models/attention.py``,
+        logical-"ctx"/"seq" resolution, the executor's ctx psums and the
+        train step's divisibility check all route through it.  Unlike the
+        data axis (where a size-1 psum is a free no-op), a size-1 ring
+        would still trace its ppermute hops — so ctx=1 deactivates here
+        and degenerates EXACTLY to today's path, byte for byte.
+        """
+        if (self.ctx_axis and self.ctx_axis in self.mesh.axis_names
+                and self.axis_size(self.ctx_axis) > 1):
+            return self.ctx_axis
+        return None
+
+    @property
+    def ctx_size(self) -> int:
+        ax = self.active_ctx_axis
+        return self.axis_size(ax) if ax else 1
 
     @property
     def model_size(self) -> int:

@@ -108,25 +108,32 @@ def build_train_step(cfg, policy, optimizer, *, aux_weight: float = 0.01,
 def build_hybrid_train_step(cfg, policy, optimizer, *,
                             num_microbatches: int, schedule: str = "1f1b",
                             max_grad_norm: float = 1.0):
-    """Train step over the hybrid DP x pipe x tensor 3-D mesh (DESIGN §5).
+    """Train step over the hybrid DP x pipe x ctx x tensor mesh (DESIGN §5-6).
 
     One scheduled SPMD executor call (core/pipeline.py) runs the WHOLE step
     in ONE shard_map over ``policy.mesh``: the global batch is cut into
     ``num_microbatches`` microbatches, each microbatch is restricted to
     per-replica rows at the region boundary (the ``BatchScatter`` operator
-    over ``policy.data_axis``), every replica drives the same fill-drain /
-    1F1B schedule over its ``pipe`` stages with TP ring collectives live
-    inside stage bodies, and the cross-replica gradient sum-reduce — the
-    parameter broadcast's Eq. 9 adjoint — rides the tail of the backward
-    drain inside the same region (no separate allreduce pass).
+    over ``policy.data_axis``) AND to per-rank sequence shards over
+    ``policy.ctx_axis`` (ring attention rotates KV shards with
+    ``KVRingShift`` inside stage bodies — no sequence all-gather), every
+    replica drives the same fill-drain / 1F1B schedule over its ``pipe``
+    stages with TP ring collectives live inside stage bodies, and the
+    cross-replica/cross-shard gradient sum-reduce — the parameter
+    broadcast's Eq. 9 adjoint — rides the tail of the backward drain
+    inside the same region (no separate allreduce pass).
 
     Degenerate factorizations reduce exactly: ``policy.data_axis`` unset or
-    dp=1 is the pure pipeline step (``build_pipeline_train_step``); a
-    single-stage mesh is pure DP x TP.  Microbatch loss/grad accumulation
-    happens inside the schedule, so ``cfg.grad_accum`` is subsumed by
-    ``num_microbatches``.  State params follow the {'pre','stage','post'}
-    pipeline layout; clip + optimizer update match ``build_train_step``;
-    metrics carry the schedule's static bubble fraction.  Wrap in jax.jit.
+    dp=1 is the pure pipeline step (``build_pipeline_train_step``); cp=1
+    is byte-identical to the 3-D hybrid path (``active_ctx_axis`` is then
+    None everywhere); a single-stage mesh is pure DP x ctx x TP.
+    Microbatch loss/grad accumulation happens inside the schedule, so
+    ``cfg.grad_accum`` is subsumed by ``num_microbatches``.  State params
+    follow the {'pre','stage','post'} pipeline layout; clip + optimizer
+    update match ``build_train_step``; metrics carry the schedule's static
+    bubble fraction.  Raises ``ValueError`` at trace time when the batch
+    does not divide by microbatches x dp or the sequence does not divide
+    by cp (the ``BatchScatter`` contract).  Wrap in jax.jit.
     """
     from repro.core.pipeline import make_schedule, pipeline_value_and_grad
     from repro.models.model import (init_pipeline_params, pipeline_fns,
@@ -146,9 +153,11 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
     parts = pipeline_param_parts(cfg, policy, pspecs)
     explicit = getattr(policy, "explicit_tp", False)
     # Per-replica microbatch restriction: the in-boundary over the data axis
-    # IS the BatchScatter operator (core/linop.py); with no data axis the
-    # logical "data" resolves to None and the spec degenerates to replicated.
-    mb_part = Partitioned(None, "data")
+    # IS the BatchScatter operator (core/linop.py), and the seq-dim boundary
+    # over the ctx axis is its sequence sibling (ring attention's shards);
+    # with no data/ctx axis the logical names resolve to None and the spec
+    # degenerates to replicated.
+    mb_part = Partitioned(None, "data", "ctx")
     pvg = pipeline_value_and_grad(
         pre_fn, stage_fn, post_fn, policy, sched,
         params_parts=parts,
@@ -159,6 +168,7 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
     bubble = sched.bubble_fraction()
     data_axis = policy.active_data_axis
     dp = policy.axis_size(data_axis) if data_axis else 1
+    cp = policy.ctx_size
 
     def train_step(state, batch):
         params = state["params"]
@@ -167,6 +177,11 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
             raise ValueError(
                 f"global batch {batch['tokens'].shape[0]} not divisible by "
                 f"num_microbatches x dp = {M} x {dp}")
+        if batch["tokens"].shape[-1] % cp:
+            raise ValueError(
+                f"sequence length {batch['tokens'].shape[-1]} not divisible "
+                f"by cp={cp} — a clamped shard would silently drop the "
+                f"trailing positions")
         mbs = jax.tree_util.tree_map(
             lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
         loss, grads = pvg(params, {"tokens": mbs["tokens"]}, mbs["labels"])

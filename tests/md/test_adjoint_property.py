@@ -34,8 +34,10 @@ def _axis_choices():
     if n >= 8:
         m2 = compat.make_mesh((2, 4), ("d0", "d1"))
         m3 = compat.make_mesh((2, 2, 2), ("data", "pipe", "model"))
+        m4 = compat.make_mesh((2, 1, 2, 2), ("data", "pipe", "ctx", "model"))
         choices += [(m2, "d0", 2), (m2, "d1", 4),
-                    (m3, "data", 2), (m3, "pipe", 2), (m3, "model", 2)]
+                    (m3, "data", 2), (m3, "pipe", 2), (m3, "model", 2),
+                    (m4, "ctx", 2), (m4, "model", 2)]
     return choices
 
 
@@ -57,7 +59,9 @@ def _moves(ax, k, sig, ls):
         if d == 0:
             mv += [("sum_reduce", None), ("all_reduce", None),
                    ("send_recv", -2), ("send_recv", -1),
-                   ("send_recv", 1), ("send_recv", 2)]
+                   ("send_recv", 1), ("send_recv", 2),
+                   ("kv_ring_shift", -2), ("kv_ring_shift", -1),
+                   ("kv_ring_shift", 1), ("kv_ring_shift", 2)]
         if ls[d] * k <= MAX_DIM:
             mv += [("grad_sum_reduce", None), ("all_gather", None)]
         if ls[d] % k == 0:
@@ -91,6 +95,9 @@ def _apply(ax, k, sig, ls, move):
         return linop.AllReduce(ax), d, ls
     if kind == "send_recv":
         return linop.SendRecv(ax, arg), d, ls
+    if kind == "kv_ring_shift":
+        # periodic sibling of send_recv: same stacked space, cyclic perm
+        return linop.KVRingShift(ax, arg), d, ls
     if kind == "grad_sum_reduce":
         ls[d] *= k
         return linop.GradSumReduce(ax, d), None, ls

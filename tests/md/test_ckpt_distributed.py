@@ -76,7 +76,7 @@ def _need8():
 
 def test_hybrid_sharded_roundtrip_bitwise(tmp_path):
     """(dp, S, tp) = (2, 2, 2): save/restore is invisible, bit for bit."""
-    _roundtrip(make_hybrid_mesh(2, 2, 2), tmp_path)
+    _roundtrip(make_hybrid_mesh(2, 2, tp=2), tmp_path)
 
 
 def test_pipeline_sharded_roundtrip_bitwise(tmp_path):
@@ -87,7 +87,7 @@ def test_pipeline_sharded_roundtrip_bitwise(tmp_path):
 def test_restored_leaves_keep_their_shardings(tmp_path):
     """restore() re-shards onto the provided NamedShardings — stage leaves
     land pipe-sharded, not accidentally replicated."""
-    mesh = make_hybrid_mesh(2, 2, 2)
+    mesh = make_hybrid_mesh(2, 2, tp=2)
     pol = Policy.for_mesh(mesh, explicit_tp=True)
     pparams = init_pipeline_params(CFG, jax.random.PRNGKey(0), pol.pipe_size)
     shardings = _param_shardings(pol, pparams)

@@ -3,8 +3,10 @@
 Refactors of the operator algebra, the executor, or the layer stack must
 not silently shift numerics: these pin the first two train-step losses of
 the README quickstart configurations — the plain single-device step, the
-1F1B 4-stage x 2-TP pipeline step, and the hybrid (dp, S, tp) = (2, 2, 2)
-step — to values recorded at fp32 with fixed PRNG seeds (threefry,
+1F1B 4-stage x 2-TP pipeline step, the hybrid (dp, S, tp) = (2, 2, 2)
+step, and the context-parallel ring-attention (dp, pp, cp, tp) =
+(2, 1, 2, 2) step — to values recorded at fp32 with fixed PRNG seeds
+(threefry,
 ``jax_threefry_partitionable`` default-on since jax 0.4.36, so the streams
 are stable across versions).  Tolerance is tight (rtol 1e-4): loose enough
 for cross-version XLA reduction-order jitter, far below any real drift.
@@ -28,12 +30,17 @@ CFG = ModelConfig(name="golden", family="dense", num_layers=4, d_model=64,
 
 # (loss after step 1, loss after step 2) — see module docstring to refresh.
 # Recorded on jax 0.4.37 / CPU / 8 emulated devices.  Step-1 loss is
-# IDENTICAL across all three paths (same init, same batch, fp32) — itself a
-# regression check on the single-device / pipeline / hybrid equivalence.
+# IDENTICAL across the first three paths (same init, same batch, fp32) —
+# itself a regression check on the single-device / pipeline / hybrid
+# equivalence — and within fp32 reduction-order jitter for the CP ring.
 GOLDEN = {
     "dense_1dev": (6.103421688079834, 5.887178897857666),
     "pipeline_1f1b_4x2": (6.103421688079834, 5.887179374694824),
     "hybrid_2x2x2": (6.103421688079834, 5.887178421020508),
+    # context parallelism (PR 5): same init, same batch, sequence sharded
+    # over a cp=2 ring — step-1 loss in the SAME 6.103421688079834 family
+    # (7.8e-8 relative: the ring merges score chunks in rotated order).
+    "hybrid_cp_2x1x2x2": (6.103421211242676, 5.887178421020508),
 }
 RTOL = 1e-4
 
@@ -83,13 +90,21 @@ def run_pipeline_1f1b_4x2():
 
 
 def run_hybrid_2x2x2():
-    return _run_scheduled(make_hybrid_mesh(2, 2, 2),
+    return _run_scheduled(make_hybrid_mesh(2, 2, tp=2),
+                          dict(num_microbatches=4, schedule="1f1b"))
+
+
+def run_hybrid_cp_2x1x2x2():
+    """The 4-D context-parallel step: (dp, pp, cp, tp) = (2, 1, 2, 2) —
+    ring attention over the ctx axis (DESIGN §6)."""
+    return _run_scheduled(make_hybrid_mesh(2, 1, 2, 2),
                           dict(num_microbatches=4, schedule="1f1b"))
 
 
 RUNNERS = {"dense_1dev": run_dense_1dev,
            "pipeline_1f1b_4x2": run_pipeline_1f1b_4x2,
-           "hybrid_2x2x2": run_hybrid_2x2x2}
+           "hybrid_2x2x2": run_hybrid_2x2x2,
+           "hybrid_cp_2x1x2x2": run_hybrid_cp_2x1x2x2}
 
 
 def _need(name):

@@ -104,20 +104,20 @@ class TestHybridMatchesReference:
         """The acceptance criterion: (dp, S, tp) = (2, 2, 2) on 8 devices
         vs fp32 single-device loss and parameter gradients."""
         _need8()
-        mesh = make_hybrid_mesh(2, 2, 2)
+        mesh = make_hybrid_mesh(2, 2, tp=2)
         _assert_matches_reference(
             *_hybrid_loss_and_grads(mesh, "1f1b", M=4))
 
     def test_2dp_2stage_2tp_fill_drain(self):
         _need8()
-        mesh = make_hybrid_mesh(2, 2, 2)
+        mesh = make_hybrid_mesh(2, 2, tp=2)
         _assert_matches_reference(
             *_hybrid_loss_and_grads(mesh, "fill_drain", M=4))
 
     def test_4dp_2stage_1tp(self):
         """A second factorization of the same 8 devices: wide DP, no TP."""
         _need8()
-        mesh = make_hybrid_mesh(4, 2, 1)
+        mesh = make_hybrid_mesh(4, 2, tp=1)
         _assert_matches_reference(
             *_hybrid_loss_and_grads(mesh, "1f1b", M=4, explicit_tp=False))
 
@@ -130,7 +130,7 @@ class TestDegenerateFactorizations:
         S, tp, M = 2, 2, 4
         pparams = init_pipeline_params(CFG, jax.random.PRNGKey(0), S)
         *_, loss3, grads3 = _hybrid_loss_and_grads(
-            make_hybrid_mesh(1, S, tp), "1f1b", M, pparams=pparams)
+            make_hybrid_mesh(1, S, tp=tp), "1f1b", M, pparams=pparams)
         *_, loss2, grads2 = _hybrid_loss_and_grads(
             make_pipeline_mesh(S, tp), "1f1b", M, pparams=pparams)
         np.testing.assert_allclose(float(loss3), float(loss2), rtol=1e-6)
@@ -142,7 +142,7 @@ class TestDegenerateFactorizations:
         end-to-end through the microbatch loop, DP mean via psum."""
         _need8()
         dp, tp, M = 2, 4, 2
-        mesh = make_hybrid_mesh(dp, 1, tp)
+        mesh = make_hybrid_mesh(dp, 1, tp=tp)
         pparams, xs, ys, loss, grads = _hybrid_loss_and_grads(
             mesh, "1f1b", M)
         pol = Policy.for_mesh(mesh, explicit_tp=True)
@@ -197,7 +197,7 @@ class TestHybridTrainStep:
         batch = {"tokens": jax.random.randint(key, (16, 16), 0, 128),
                  "labels": jax.random.randint(key, (16, 16), 0, 128)}
 
-        pol3 = Policy.for_mesh(make_hybrid_mesh(2, 2, 2), explicit_tp=True)
+        pol3 = Policy.for_mesh(make_hybrid_mesh(2, 2, tp=2), explicit_tp=True)
         opt = make_optimizer("adamw", total_steps=10)
         step3 = jax.jit(build_hybrid_train_step(
             CFG, pol3, opt, num_microbatches=4))
@@ -211,7 +211,7 @@ class TestHybridTrainStep:
         assert float(m2["loss"]) < float(m1["loss"])  # same batch twice
 
         # dp=1 on the 3-D mesh == the 2-D pipeline builder, step for step.
-        pol_dp1 = Policy.for_mesh(make_hybrid_mesh(1, 2, 2), explicit_tp=True)
+        pol_dp1 = Policy.for_mesh(make_hybrid_mesh(1, 2, tp=2), explicit_tp=True)
         pol_2d = Policy.for_mesh(make_pipeline_mesh(2, 2), explicit_tp=True)
         s_a = init_train_state(
             CFG, init_pipeline_params(CFG, jax.random.PRNGKey(0), 2), opt)
@@ -231,7 +231,7 @@ class TestHybridTrainStep:
         from repro.optim import make_optimizer
         from repro.train import build_hybrid_train_step, init_train_state
 
-        pol = Policy.for_mesh(make_hybrid_mesh(2, 2, 2), explicit_tp=True)
+        pol = Policy.for_mesh(make_hybrid_mesh(2, 2, tp=2), explicit_tp=True)
         opt = make_optimizer("adamw", total_steps=10)
         step = build_hybrid_train_step(CFG, pol, opt, num_microbatches=4)
         params = init_pipeline_params(CFG, jax.random.PRNGKey(0), 2)

@@ -25,6 +25,8 @@ CONCRETE_OPS = [
     (linop.AllToAll(AX, 1, 0), (8, 8, 4)),
     (linop.SendRecv(AX, 1), (16, 2)),
     (linop.SendRecv(AX, -2), (16, 2)),
+    (linop.KVRingShift(AX, 1), (16, 2)),
+    (linop.KVRingShift(AX, -3), (16, 2)),
     (linop.BatchScatter(AX, 0), (16, 3)),
     (linop.BatchScatter(AX, 1), (3, 16)),
     (linop.GradSumReduce(AX, 0), (16, 3)),
@@ -74,6 +76,10 @@ COMPOSITES = [
     # the DP round trip: scatter per-replica batch blocks, sum them back —
     # S* S = I on the global batch (DESIGN §5); self-adjoint by reversal
     (linop.GradSumReduce(AX, 1) @ linop.BatchScatter(AX, 1), (4, 16)),
+    # the ring-attention round trip: a full ring of k cyclic hops is the
+    # identity permutation (DESIGN §6); and a hop composed with its adjoint
+    (linop.KVRingShift(AX, -1) @ linop.KVRingShift(AX, 1), (16, 3)),
+    (linop.AllGather(AX, 1) @ linop.KVRingShift(AX, 1), (16, 4)),
 ]
 
 

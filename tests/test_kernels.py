@@ -60,6 +60,36 @@ class TestFlashAttention:
         g2 = jax.grad(lambda q: ref.attention_ref(q, k, v, causal=True).sum())(q)
         np.testing.assert_allclose(g1, g2, atol=1e-4, rtol=1e-4)
 
+    # Pinned parity bar for the train-path dispatch (the oracle
+    # blockwise_attention is what the fused dist_jit path and the ring
+    # executor lower to): interpret-mode Pallas forward AND the custom_vjp
+    # backward must track it at fp32 tolerances.  Covers the gap where
+    # kops.flash_attention was only reachable off the fused path and had
+    # no gradient test against the training oracle.
+    FWD_RTOL = 2e-5
+    VJP_RTOL = 1e-4
+
+    @pytest.mark.parametrize("B,S,H,KH,hd", [
+        (1, 128, 4, 4, 32),    # MHA
+        (2, 128, 8, 2, 32),    # GQA 4:1
+    ])
+    def test_interpret_fwd_and_vjp_parity_vs_blockwise(self, B, S, H, KH, hd):
+        from repro.models.attention import blockwise_attention
+        q, k, v = (_r((B, S, H, hd), 20), _r((B, S, KH, hd), 21),
+                   _r((B, S, KH, hd), 22))
+        out, vjp = jax.vjp(
+            lambda q, k, v: ops.flash_attention(q, k, v, True,
+                                                "pallas_interpret"), q, k, v)
+        want, vjp_ref = jax.vjp(
+            lambda q, k, v: blockwise_attention(q, k, v, chunk=64,
+                                                causal=True), q, k, v)
+        np.testing.assert_allclose(out, want, rtol=self.FWD_RTOL,
+                                   atol=self.FWD_RTOL)
+        g = _r(out.shape, 23)
+        for got, ref_g, name in zip(vjp(g), vjp_ref(g), "qkv"):
+            np.testing.assert_allclose(got, ref_g, rtol=self.VJP_RTOL,
+                                       atol=self.VJP_RTOL, err_msg=name)
+
 
 class TestSSDScan:
     @pytest.mark.parametrize("B,S,H,P,N,chunk", [

@@ -26,8 +26,12 @@ def test_multidevice_suite():
     env["REPRO_MD_SUITE"] = "1"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     proc = subprocess.run(
+        # -m "not slow": the compile-heavy ring-attention equivalence and
+        # HLO tests ride the CI multidevice job's dedicated ctx-live leg
+        # (ci.yml) so this subprocess stays inside its 3600 s budget; the
+        # (2,1,2,2) CP smoke and everything else still run here.
         [sys.executable, "-m", "pytest", os.path.join(ROOT, "tests", "md"),
-         "-q", "--no-header", "-x"],
+         "-q", "--no-header", "-x", "-m", "not slow"],
         env=env,
         capture_output=True,
         text=True,

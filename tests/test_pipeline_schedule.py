@@ -218,7 +218,7 @@ def test_make_hybrid_mesh_binds_policy():
     from repro.launch.mesh import make_hybrid_mesh, make_pipeline_mesh
     from repro.sharding import Policy
 
-    pol = Policy.for_mesh(make_hybrid_mesh(1, 1, 1))  # 1-device degenerate
+    pol = Policy.for_mesh(make_hybrid_mesh(1, 1, tp=1))  # 1-device degenerate
     assert pol.data_axis == "data" and pol.active_data_axis == "data"
     assert pol.pipe_axis == "pipe" and pol.model_axis == "model"
     assert pol.resolve_axis("data") == "data"
@@ -234,3 +234,44 @@ def test_make_hybrid_mesh_binds_policy():
     assert pol2.dp_size == 1
     assert pol2.phys("batch") is None
     assert pol2.phys("fsdp") is None
+
+
+def test_context_assignment_and_cp_specs():
+    """context_assignment mirrors replica_assignment for the ctx axis:
+    contiguous per-rank position ranges, with the same trace-time
+    divisibility contract the train step enforces (S % cp)."""
+    from repro.configs import SHAPES, get_config, reduced
+    from repro.launch.specs import context_assignment, hybrid_input_specs
+
+    rows = context_assignment(32, 4)
+    assert [list(r)[:1] + [list(r)[-1]] for r in rows] == [
+        [0, 7], [8, 15], [16, 23], [24, 31]]
+    with pytest.raises(ValueError, match="not divisible"):
+        context_assignment(30, 4)
+
+    cfg = reduced(get_config("glm4-9b"))
+    xs, labels = hybrid_input_specs(cfg, "train_4k", num_microbatches=8,
+                                    dp=2, cp=4)
+    assert xs["tokens"].shape == labels.shape        # host cut is unchanged
+    with pytest.raises(ValueError, match="not divisible"):
+        hybrid_input_specs(cfg, "train_4k", num_microbatches=8, dp=2,
+                           cp=SHAPES["train_4k"].seq_len - 1)
+
+
+def test_make_hybrid_mesh_cp_binds_policy():
+    """cp=1 keeps the exact 3-D mesh (byte-identical program with PR 3);
+    cp>1 adds the ctx axis, for_mesh binds it by name, and
+    active_ctx_axis mirrors active_data_axis as the single is-CP-on
+    predicate (a size-1 ctx axis deactivates too)."""
+    from repro.launch.mesh import make_hybrid_mesh
+    from repro.sharding import Policy
+
+    assert make_hybrid_mesh(1, 1, 1, 1).axis_names == (
+        "data", "pipe", "model")
+
+    pol = Policy.for_mesh(make_hybrid_mesh(1, 1, tp=1))
+    assert pol.ctx_axis is None and pol.active_ctx_axis is None
+    assert pol.ctx_size == 1
+    assert pol.phys("ctx") is None                 # degenerate resolution
+    # "seq" keeps its SP seq->model overload without a ctx axis
+    assert Policy(mesh=make_hybrid_mesh(1, 1, tp=1)).phys("seq") == "model"
