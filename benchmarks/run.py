@@ -20,9 +20,12 @@
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
 writes the machine-readable perf artifact (per-row us + structured extras
 + mesh factorization + device kind) the CI multidevice job uploads as
-BENCH_5.json — the gateable perf trajectory from PR 6 on.  Run:
+BENCH_6.json — the gateable perf trajectory; ``--lint`` additionally runs
+``repro.analysis.hlo_lint`` over the compiled programs and attaches the
+structured findings to the rows (an error-severity finding in a CP program
+fails the bench).  Run:
   PYTHONPATH=src python -m benchmarks.run [--only adjoint_table,...] \
-      [--json BENCH_5.json]
+      [--json BENCH_6.json] [--lint]
 (uses 8 host devices; sets XLA_FLAGS when unset)
 """
 
@@ -44,6 +47,12 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 
 ROWS = []
+
+# Set by --lint: benches that compile whole programs also run the HLO
+# anti-pattern lint (repro.analysis.hlo_lint) and attach the structured
+# findings to their rows, so the BENCH json artifact doubles as the CI
+# lint report for the compiled quickstart programs.
+LINT = False
 
 
 def emit(name, us, derived="", **extra):
@@ -202,8 +211,9 @@ def bench_layer_micro():
     m2 = mesh2d()
     x = jax.random.normal(jax.random.PRNGKey(0), (32, 512))
     w = jax.random.normal(jax.random.PRNGKey(1), (1024, 512))
-    f = jax.jit(lambda x, w: L.dist_affine(m2, x, w, None, fo_axis="data",
-                                           fi_axis="model"))
+    # repro-lint: allow — this bench measures the deprecated seed path
+    f = jax.jit(lambda x, w: L.dist_affine(m2, x, w, None,  # repro-lint: allow
+                                           fo_axis="data", fi_axis="model"))
     us = timeit(f, x, w)
     flops = 2 * 32 * 512 * 1024
     emit("layer_micro/dist_affine", us, f"GFLOP/s={flops/us/1e3:.2f}")
@@ -454,16 +464,34 @@ def bench_ring_attention():
         except Exception:                      # backend without the API
             return {}
 
-    for tag, step, st, loss, ag, peak, comp in (
-            ("sp_gather_1x8", step_sp, st_sp, loss_sp, ag_sp, peak_sp, comp_sp),
+    def lint_stats(hlo, ctx_live):
+        """--lint: HLO anti-pattern findings for the row's json extras.
+        ctx is declared live for BOTH programs: the CP one must come back
+        error-clean, the SP baseline documents the gather CP eliminates."""
+        if not LINT:
+            return {}
+        from repro.analysis.hlo_lint import format_findings, lint_hlo
+        findings = lint_hlo(hlo, seq_len=S, ctx_live=True)
+        if ctx_live:
+            errors = [f for f in findings if f.severity == "error"]
+            assert not errors, format_findings(errors)
+        else:
+            assert any(f.rule == "seq-dim-allgather" for f in findings), \
+                "SP baseline no longer triggers the seq-gather rule"
+        return {"lint_findings": [f.to_dict() for f in findings]}
+
+    for tag, step, st, loss, ag, peak, comp, is_cp in (
+            ("sp_gather_1x8", step_sp, st_sp, loss_sp, ag_sp, peak_sp,
+             comp_sp, False),
             (f"cp_ring_1x{cp}x2", step_cp, st_cp, loss_cp, ag_cp, peak_cp,
-             comp_cp)):
+             comp_cp, True)):
         us = timeit(lambda: step(st, batch)[1]["loss"], iters=5, warmup=1)
         emit(f"ring_attention/{tag}", us,
              f"seq_allgather_bytes={ag};peak_act_bytes={peak};"
              f"loss={loss:.4f}",
              mesh=tag, seq_allgather_bytes=ag, peak_activation_bytes=peak,
-             loss=loss, seq_len=S, **mem_stats(comp))
+             loss=loss, seq_len=S, **mem_stats(comp),
+             **lint_stats(comp.as_text(), is_cp))
 
     # hybrid executor wall-clock per 4-D factorization (same model family,
     # untied head for the pipeline cut).
@@ -583,8 +611,14 @@ def main():
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the machine-readable perf artifact "
-                         "(BENCH_5.json in CI)")
+                         "(BENCH_6.json in CI)")
+    ap.add_argument("--lint", action="store_true",
+                    help="run repro.analysis.hlo_lint over the compiled "
+                         "programs and attach findings to the json rows "
+                         "(errors in a CP program fail the bench)")
     args = ap.parse_args()
+    global LINT
+    LINT = args.lint
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:

@@ -1,0 +1,46 @@
+"""Static analysis passes for the operator algebra (DESIGN §7).
+
+Three passes, one per layer of the stack:
+
+- ``spaces``: the static space type-checker — validates that a composite
+  ``LinearOp`` is a well-typed map between the paper's global vector
+  spaces (replicated F^n vs k-worker-stacked F^{kn}) BEFORE any device
+  work, and is the shared space registry the property fuzzer samples from.
+- ``hlo_lint``: anti-pattern rules over compiled HLO text (sequence-dim
+  all-gathers under context parallelism, collectives inside divergent
+  conditionals, adjacent unfused all-reduces, missing gradient psums,
+  activation-budget overruns) as structured findings.
+- ``tools/lint_repro.py`` (repo root): the AST-level repo-invariant lint
+  (registered adjoints, no bare ``shard_map``, no collectives under
+  divergent Python ``if``s, deprecated ``dist_*`` call sites).
+
+Submodules load lazily so ``python -m repro.analysis.spaces`` runs without
+a double-import warning.
+"""
+
+__all__ = [
+    "spaces",
+    "hlo_lint",
+    "typecheck",
+    "Finding",
+    "lint_hlo",
+    "lint_compiled",
+]
+
+_LAZY = {
+    "typecheck": ("spaces", "typecheck"),
+    "Finding": ("hlo_lint", "Finding"),
+    "lint_hlo": ("hlo_lint", "lint_hlo"),
+    "lint_compiled": ("hlo_lint", "lint_compiled"),
+}
+
+
+def __getattr__(name):
+    """Resolve submodules and their front-door names on first access."""
+    import importlib
+    if name in ("spaces", "hlo_lint"):
+        return importlib.import_module(f".{name}", __name__)
+    if name in _LAZY:
+        mod, attr = _LAZY[name]
+        return getattr(importlib.import_module(f".{mod}", __name__), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,294 @@
+"""Anti-pattern lint over compiled (partitioned) HLO text (DESIGN §7).
+
+Built on the shared module parser in ``roofline/hlo_profile.py``; each rule
+emits structured :class:`Finding` records (rule id, severity, HLO opcode,
+bytes, line) instead of a bare assert, so the same rules serve the md
+tests, ``benchmarks/run.py --lint`` and CI's static-analysis job:
+
+``seq-dim-allgather``    sequence-dim all-gathers while context parallelism
+                         is live (PR 5's acceptance assertion as a rule).
+``divergent-collective`` collectives inside ``conditional`` branch
+                         computations — the SPMD deadlock class the ring
+                         code avoids by hand with a ``jnp.where`` mask.
+``adjacent-allreduce``   back-to-back all-reduces in one computation that
+                         XLA left unfused (combinable into one).
+``missing-grad-reduce``  a dp/ctx gradient psum the caller declares live is
+                         absent from the module (drain-tail epilogue lost).
+``activation-budget``    peak rank-3+ activation bytes exceed the declared
+                         ``attention_working_set_bytes`` budget.
+
+Entry points: ``lint_hlo(hlo_text, ...)``, ``lint_compiled(compiled, ...)``
+and ``python -m repro.analysis.hlo_lint --quickstart`` (compiles the
+SP and CP quickstart train steps on 8 emulated devices, asserts CP lints
+clean and the SP program triggers the seq-dim rule — the CI forced
+violation).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+from repro.roofline.hlo_profile import (HloInstruction, parse_instructions,
+                                        peak_activation_bytes,
+                                        seq_gather_bytes)
+
+__all__ = ["Finding", "RULES", "lint_hlo", "lint_compiled",
+           "format_findings"]
+
+RULES = {
+    "seq-dim-allgather": "sequence-dim all-gather while ctx is live",
+    "divergent-collective": "collective inside a conditional branch",
+    "adjacent-allreduce": "back-to-back unfused all-reduces",
+    "missing-grad-reduce": "declared gradient psum absent from module",
+    "activation-budget": "peak activation exceeds declared budget",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One structured lint finding over a compiled module."""
+
+    rule: str
+    severity: str
+    message: str
+    opcode: str = ""
+    bytes: int = 0
+    lineno: int = 0
+
+    def to_dict(self) -> dict:
+        """Plain-dict form for JSON artifacts (benchmarks --lint)."""
+        return asdict(self)
+
+
+_COLLECTIVE_BASES = ("all-gather", "all-reduce", "reduce-scatter",
+                     "collective-permute", "all-to-all")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|calls|body|condition|true_computation|false_computation)="
+    r"%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _branch_roots(ins: HloInstruction) -> list:
+    """Computation names a ``conditional`` instruction branches into."""
+    names = []
+    for attr in ("true_computation", "false_computation"):
+        m = re.search(attr + r"=%?([\w.\-]+)", ins.line)
+        if m:
+            names.append(m.group(1))
+    m = _BRANCHES_RE.search(ins.line)
+    if m:
+        names += [n.strip().lstrip("%") for n in m.group(1).split(",")
+                  if n.strip()]
+    return names
+
+
+def _check_divergent_collectives(instrs) -> list:
+    """Collectives reachable from any conditional branch computation.
+
+    Branch computations execute on a data-dependent subset of workers, so a
+    collective inside one is the SPMD deadlock class the ring code avoids
+    with a single ``jnp.where`` predicate (core/ring_attention.py).
+    ``while`` bodies are fine — every worker iterates them together.
+    """
+    by_comp = {}
+    for ins in instrs:
+        by_comp.setdefault(ins.computation, []).append(ins)
+    roots = []
+    for ins in instrs:
+        if ins.base_opcode == "conditional":
+            roots += _branch_roots(ins)
+    # Transitive closure over called computations from the branch roots.
+    reachable, work = set(), list(roots)
+    while work:
+        comp = work.pop()
+        if comp in reachable:
+            continue
+        reachable.add(comp)
+        for ins in by_comp.get(comp, ()):
+            work += _CALLED_RE.findall(ins.line)
+    out = []
+    for comp in sorted(reachable):
+        for ins in by_comp.get(comp, ()):
+            if ins.base_opcode in _COLLECTIVE_BASES:
+                out.append(Finding(
+                    "divergent-collective", "error",
+                    f"{ins.base_opcode} inside conditional branch "
+                    f"computation '{comp}' — divergent workers deadlock "
+                    f"(predicate with jnp.where instead)",
+                    opcode=ins.base_opcode, bytes=ins.out_bytes,
+                    lineno=ins.lineno))
+    return out
+
+
+def _check_adjacent_allreduce(instrs) -> list:
+    """Consecutive all-reduce instructions in one computation (combinable)."""
+    out = []
+    prev = None
+    for ins in instrs:
+        if (prev is not None and ins.base_opcode == "all-reduce"
+                and prev.base_opcode == "all-reduce"
+                and ins.computation == prev.computation
+                # async pairs (start/done) of ONE collective are not two.
+                and not (prev.opcode.endswith("-start")
+                         and ins.opcode.endswith("-done"))):
+            out.append(Finding(
+                "adjacent-allreduce", "warning",
+                f"adjacent all-reduces at lines {prev.lineno},{ins.lineno} "
+                f"in '{ins.computation}' — combinable into one",
+                opcode="all-reduce", bytes=prev.out_bytes + ins.out_bytes,
+                lineno=ins.lineno))
+        prev = ins
+    return out
+
+
+def lint_hlo(hlo: str, *, seq_len: int | None = None,
+             ctx_live: bool = False, grad_reduce_axes=(),
+             activation_budget_bytes: int | None = None) -> list:
+    """Run every applicable rule over an HLO text module.
+
+    ``seq_len``/``ctx_live`` arm the sequence-gather rule; a non-empty
+    ``grad_reduce_axes`` declares that dp/ctx gradient psums MUST appear
+    (the pipeline drain-tail epilogue); ``activation_budget_bytes`` arms
+    the working-set budget rule.  Returns ``Finding`` records, errors
+    first.
+    """
+    instrs = parse_instructions(hlo)
+    findings = []
+    if ctx_live and seq_len is not None:
+        for ins in instrs:
+            b = seq_gather_bytes(ins, seq_len)
+            if b:
+                findings.append(Finding(
+                    "seq-dim-allgather", "error",
+                    f"all-gather materializes the full sequence "
+                    f"(S={seq_len}) while ctx is live — the SP->TP gather "
+                    f"context parallelism exists to eliminate",
+                    opcode=ins.base_opcode, bytes=b, lineno=ins.lineno))
+    findings += _check_divergent_collectives(instrs)
+    findings += _check_adjacent_allreduce(instrs)
+    if grad_reduce_axes:
+        n_ar = sum(1 for i in instrs if i.base_opcode == "all-reduce")
+        if n_ar == 0:
+            findings.append(Finding(
+                "missing-grad-reduce", "error",
+                f"gradient psum over axes {tuple(grad_reduce_axes)} is "
+                f"declared live but the module contains NO all-reduce — "
+                f"drain-tail epilogue lost?"))
+    if activation_budget_bytes is not None:
+        peak = peak_activation_bytes(hlo)
+        if peak > activation_budget_bytes:
+            findings.append(Finding(
+                "activation-budget", "error",
+                f"peak rank-3+ activation {peak} B exceeds the declared "
+                f"working-set budget {activation_budget_bytes} B",
+                bytes=peak))
+    findings.sort(key=lambda f: (f.severity != "error", f.lineno))
+    return findings
+
+
+def lint_compiled(compiled, **kwargs) -> list:
+    """``lint_hlo`` over a jax ``Compiled`` object's module text."""
+    return lint_hlo(compiled.as_text(), **kwargs)
+
+
+def format_findings(findings) -> str:
+    """Human-readable one-line-per-finding rendering."""
+    if not findings:
+        return "hlo_lint: clean"
+    lines = []
+    for f in findings:
+        loc = f":{f.lineno}" if f.lineno else ""
+        by = f" [{f.bytes} B]" if f.bytes else ""
+        lines.append(f"{f.severity.upper():7s} {f.rule}{loc}{by}: "
+                     f"{f.message}")
+    return "\n".join(lines)
+
+
+def _quickstart() -> int:
+    """Compile the SP and CP quickstart train steps on 8 emulated devices;
+    assert the CP module lints clean and the SP module (ctx declared live)
+    triggers the seq-dim rule — CI's forced violation for this pass."""
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import jax
+
+    from repro import compat
+    from repro.configs import ModelConfig
+    from repro.models import init_params
+    from repro.optim import make_optimizer
+    from repro.sharding import Policy
+    from repro.train import build_train_step, init_train_state
+
+    if len(jax.devices()) < 8:
+        print("hlo_lint --quickstart: needs 8 devices, skipping")
+        return 0
+    # Mirrors tests/md/test_ring_attention.py::TestCompiledHLO — S distinct
+    # from every other global dim so the structural scan cannot alias.
+    cfg = ModelConfig(name="hlo", family="dense", num_layers=2,
+                      d_model=64, num_heads=8, num_kv_heads=4,
+                      head_dim=8, d_ff=128, vocab_size=256,
+                      dtype="float32", remat=False, attn_chunk=24)
+    B, S = 8, 96
+    key = jax.random.PRNGKey(3)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, 256),
+             "labels": jax.random.randint(jax.random.fold_in(key, 1),
+                                          (B, S), 0, 256)}
+    opt = make_optimizer("adamw", total_steps=10)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def compile_step(pol):
+        """Partitioned-HLO text of the train step under ``pol``'s mesh."""
+        step = jax.jit(build_train_step(cfg, pol, opt))
+        state = init_train_state(cfg, params, opt)
+        return step.lower(state, batch).compile().as_text()
+
+    hlo_sp = compile_step(
+        Policy(mesh=compat.make_mesh((1, 8), ("data", "model"))))
+    hlo_cp = compile_step(
+        Policy(mesh=compat.make_mesh((1, 4, 2), ("data", "ctx", "model")),
+               ctx_axis="ctx"))
+
+    cp_findings = lint_hlo(hlo_cp, seq_len=S, ctx_live=True)
+    cp_errors = [f for f in cp_findings if f.severity == "error"]
+    print("== CP train step ==")
+    print(format_findings(cp_findings))
+    sp_findings = lint_hlo(hlo_sp, seq_len=S, ctx_live=True)
+    sp_seq = [f for f in sp_findings if f.rule == "seq-dim-allgather"]
+    print("== SP train step (forced violation: ctx declared live) ==")
+    print(format_findings(sp_seq))
+    if cp_errors:
+        print("FAIL: CP quickstart program has lint errors")
+        return 1
+    if not sp_seq:
+        print("FAIL: forced seq-dim all-gather was not caught")
+        return 1
+    print("hlo_lint --quickstart: CP clean, forced violation caught")
+    return 0
+
+
+def main(argv=None) -> int:
+    """CLI: ``--quickstart`` or lint an HLO text file."""
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", nargs="?", help="HLO text file to lint")
+    ap.add_argument("--quickstart", action="store_true",
+                    help="compile + lint the SP/CP quickstart programs")
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--ctx-live", action="store_true")
+    ap.add_argument("--budget", type=int, default=None)
+    args = ap.parse_args(argv)
+    if args.quickstart:
+        return _quickstart()
+    if not args.path:
+        ap.error("need an HLO file or --quickstart")
+    findings = lint_hlo(open(args.path).read(), seq_len=args.seq_len,
+                        ctx_live=args.ctx_live,
+                        activation_budget_bytes=args.budget)
+    print(format_findings(findings))
+    return 1 if any(f.severity == "error" for f in findings) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -46,17 +46,26 @@ def norm(a) -> jax.Array:
 
 
 class AdjointReport:
-    """Outcome of one Eq. 13 coherence test: name, rel_err, pass/fail."""
+    """Outcome of one Eq. 13 coherence test: name, rel_err, pass/fail.
 
-    def __init__(self, name: str, rel_err: float, eps: float):
+    ``detail`` (optional) localizes a FAILING composite: which op position
+    in the chain first breaks Eq. 13 and its space signature — filled in by
+    ``linop.check_adjoint``, empty on passing reports.
+    """
+
+    def __init__(self, name: str, rel_err: float, eps: float,
+                 detail: str = ""):
         self.name = name
         self.rel_err = float(rel_err)
         self.eps = float(eps)
         self.passed = self.rel_err < eps
+        self.detail = detail
 
     def __repr__(self):
         status = "PASS" if self.passed else "FAIL"
-        return f"AdjointReport({self.name}: rel_err={self.rel_err:.3e} < {self.eps:.1e} [{status}])"
+        extra = f"; {self.detail}" if self.detail else ""
+        return (f"AdjointReport({self.name}: rel_err={self.rel_err:.3e} "
+                f"< {self.eps:.1e} [{status}]{extra})")
 
 
 def adjoint_test(

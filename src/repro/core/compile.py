@@ -28,6 +28,7 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core.linop import SpaceTypeError
 from repro.sharding.spec import Partitioned
 
 __all__ = ["DistContext", "current_ctx", "dist_jit", "resolve_parts"]
@@ -68,6 +69,43 @@ def resolve_parts(parts, policy):
     raise TypeError(f"cannot resolve partition declaration {parts!r}")
 
 
+def _iter_specs(specs):
+    """Yield every PartitionSpec leaf of a resolved boundary pytree."""
+    if isinstance(specs, P):
+        yield specs
+    elif isinstance(specs, dict):
+        for v in specs.values():
+            yield from _iter_specs(v)
+    elif isinstance(specs, (tuple, list)):
+        for v in specs:
+            yield from _iter_specs(v)
+
+
+def _check_boundary(specs, mesh, role: str):
+    """Static validation of a dist_jit boundary (DESIGN §7): every named
+    mesh axis must exist on the mesh, and no axis may shard two tensor
+    dims of one value — ill-typed programs fail BEFORE compilation with a
+    targeted SpaceTypeError instead of deep inside shard_map."""
+    axes = set(mesh.axis_names)
+    for spec in _iter_specs(specs):
+        seen = set()
+        for entry in spec:
+            names = entry if isinstance(entry, (tuple, list)) else (entry,)
+            for name in names:
+                if name is None:
+                    continue
+                if name not in axes:
+                    raise SpaceTypeError(
+                        f"dist_jit {role} spec {spec} names mesh axis "
+                        f"{name!r} but the mesh has axes "
+                        f"{tuple(mesh.axis_names)}")
+                if name in seen:
+                    raise SpaceTypeError(
+                        f"dist_jit {role} spec {spec} shards axis {name!r} "
+                        f"over two tensor dims of one value")
+                seen.add(name)
+
+
 def dist_jit(fn, policy, in_parts, out_parts, *, jit: bool = True):
     """Run ``fn`` inside ONE shard_map over ``policy.mesh``.
 
@@ -86,6 +124,8 @@ def dist_jit(fn, policy, in_parts, out_parts, *, jit: bool = True):
     mesh = policy.mesh
     in_specs = resolve_parts(in_parts, policy)
     out_specs = resolve_parts(out_parts, policy)
+    _check_boundary(in_specs, mesh, "in_parts")
+    _check_boundary(out_specs, mesh, "out_parts")
 
     def body(*args):
         _STACK.append(DistContext(policy))

@@ -19,7 +19,13 @@ Each ``LinearOp``:
 - declares canonical boundary specs ``in_spec(rank)`` / ``out_spec(rank)``
   describing how a GLOBAL array maps onto per-worker shards when the op is
   lifted to a global operator F (the paper's "inclusive" memory view: the
-  global vector is the concatenation of the workers' local states).
+  global vector is the concatenation of the workers' local states),
+- declares a STATIC space signature via ``space_map(space, axis_sizes)``:
+  which global vector space (:class:`Space` — replicated F^n vs k-worker
+  stacked F^{kn}) it consumes and which it produces.  ``Compose`` rejects
+  kind-mismatched junctions at construction time, and
+  ``analysis/spaces.py::typecheck`` runs the full shape-accurate judgment
+  (DESIGN §7) without touching a device.
 
 ``check_adjoint`` is the generic Eq. 13 harness: for any op (or composite)
 it lifts F and F* to global operators via ``shard_map`` and verifies BOTH
@@ -57,6 +63,8 @@ from . import primitives as prim
 from .adjoint import AdjointReport, adjoint_test, inner, norm
 
 __all__ = [
+    "Space",
+    "SpaceTypeError",
     "LinearOp",
     "Identity",
     "Broadcast",
@@ -74,6 +82,7 @@ __all__ = [
     "Compose",
     "check_adjoint",
     "lift",
+    "space_of",
 ]
 
 
@@ -84,6 +93,115 @@ def _axis_at(axis, dim: int, rank: int) -> P:
     return P(*[axis if i == dim else None for i in range(rank)])
 
 
+class SpaceTypeError(TypeError):
+    """An operator was applied outside its domain space (paper §2).
+
+    The paper's operators are maps between SPECIFIC global vector spaces —
+    replicated F^n vs k-worker-stacked F^{kn} — so e.g. ``Broadcast`` after
+    ``AllReduce`` over the same axis is ill-typed: the value is already
+    stacked.  Raised structurally by ``Compose`` at construction time, with
+    full shard-shape accuracy by ``analysis/spaces.py::typecheck``, and by
+    ``dist_jit`` for malformed boundary specs.
+    """
+
+
+@dataclass(frozen=True)
+class Space:
+    """A global vector space of the paper's §2 inclusive memory view.
+
+    ``kind == "replicated"``: every worker holds the same F^n value of local
+    shape ``local_shape`` (``axis``/``dim`` are None).  ``kind == "stacked"``:
+    the global vector is the concatenation of k per-worker realizations over
+    mesh ``axis``, stacked along tensor ``dim`` — the global array is
+    ``local_shape`` with ``dim`` scaled by k.
+    """
+
+    kind: str
+    local_shape: Tuple[int, ...]
+    axis: str | None = None
+    dim: int | None = None
+
+    @classmethod
+    def replicated(cls, local_shape) -> "Space":
+        """The replicated space F^n with per-worker shape ``local_shape``."""
+        return cls("replicated", tuple(int(d) for d in local_shape))
+
+    @classmethod
+    def stacked(cls, axis: str, dim: int, local_shape) -> "Space":
+        """The ``axis``-stacked space F^{kn}, stacking along tensor ``dim``."""
+        shape = tuple(int(d) for d in local_shape)
+        if not 0 <= dim < len(shape):
+            raise SpaceTypeError(
+                f"stacking dim {dim} out of range for local shape {shape}")
+        return cls("stacked", shape, axis, int(dim))
+
+    def global_shape(self, axis_sizes=None) -> Tuple[int, ...]:
+        """Shape of the global array (stacked dim scaled by the axis size)."""
+        if self.kind == "replicated":
+            return self.local_shape
+        k = (axis_sizes if isinstance(axis_sizes, int)
+             else int(axis_sizes[self.axis]))
+        g = list(self.local_shape)
+        g[self.dim] *= k
+        return tuple(g)
+
+    def describe(self) -> str:
+        """Human-readable form used in typechecker diagnostics."""
+        if self.kind == "replicated":
+            return f"replicated F^n, local shape {self.local_shape}"
+        return (f"stacked F^(kn) over '{self.axis}' at dim {self.dim}, "
+                f"local shape {self.local_shape}")
+
+
+def _axis_size(op, axis_sizes) -> int:
+    """The size k of ``op.axis``: from an int or a {axis: size} mapping."""
+    if isinstance(axis_sizes, int):
+        return axis_sizes
+    try:
+        return int(axis_sizes[op.axis])
+    except KeyError:
+        raise SpaceTypeError(
+            f"{op!r} acts over mesh axis '{op.axis}' which is not in the "
+            f"mesh (axes: {sorted(axis_sizes)})") from None
+
+
+def _expect_replicated(op, space: Space):
+    if space.kind != "replicated":
+        raise SpaceTypeError(
+            f"{op!r} consumes the replicated space F^n, got {space.describe()}"
+            " — reduce or gather first")
+
+
+def _expect_stacked(op, space: Space, dim: int | None = None):
+    if space.kind != "stacked":
+        raise SpaceTypeError(
+            f"{op!r} consumes the '{op.axis}'-stacked space F^(kn), got "
+            f"{space.describe()} — broadcast or scatter first")
+    if space.axis != op.axis:
+        raise SpaceTypeError(
+            f"{op!r} acts over mesh axis '{op.axis}' but the value is stacked "
+            f"over '{space.axis}' (single-axis space model: reduce or gather "
+            f"'{space.axis}' first)")
+    if dim is not None and space.dim != dim:
+        raise SpaceTypeError(
+            f"{op!r} expects stacking along tensor dim {dim}, got "
+            f"{space.describe()}")
+
+
+def _expect_dim(op, space: Space, dim: int):
+    if not 0 <= dim < len(space.local_shape):
+        raise SpaceTypeError(
+            f"{op!r} acts on tensor dim {dim} but the local shape is "
+            f"{space.local_shape}")
+
+
+def _expect_divisible(op, space: Space, dim: int, k: int):
+    if space.local_shape[dim] % k:
+        raise SpaceTypeError(
+            f"{op!r} splits tensor dim {dim} into {k} blocks but the local "
+            f"extent is {space.local_shape[dim]} (not divisible)")
+
+
 @dataclass(frozen=True)
 class LinearOp:
     """A linear operator on per-worker shards, with a registered adjoint.
@@ -92,13 +210,32 @@ class LinearOp:
     inside a shard_map body) and ``_adjoint`` (the hand-derived adjoint,
     returned by ``.T``).  All metadata lives in frozen dataclass fields, so
     equality is structural — ``(A @ B).T == B.T @ A.T`` is an actual ``==``.
+
+    ``DOMAIN_KIND``/``CODOMAIN_KIND`` ("replicated" | "stacked" | "any") are
+    the kind-level space signature used by ``Compose`` to reject ill-typed
+    junctions structurally; ``space_map`` is the full shard-shape-accurate
+    typing judgment (DESIGN §7) driven by ``analysis/spaces.py::typecheck``.
     """
+
+    DOMAIN_KIND = "any"
+    CODOMAIN_KIND = "any"
 
     def __call__(self, x):
         raise NotImplementedError
 
     def _adjoint(self) -> "LinearOp":
         raise NotImplementedError
+
+    def space_map(self, space: Space, axis_sizes) -> Space:
+        """Codomain :class:`Space` for input ``space``, or SpaceTypeError.
+
+        ``axis_sizes`` is the op's own mesh-axis size (int) or a
+        ``{axis: size}`` mapping.  Every concrete op defines (or, like
+        ``pipeline.StageBoundary``, inherits) a real signature; the base
+        refuses so an unsigned op can never slip through ``typecheck``.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} declares no space signature")
 
     @property
     def T(self) -> "LinearOp":
@@ -124,9 +261,22 @@ class Compose(LinearOp):
 
     Adjoint: the paper §2 reversal law ``(A B)* = B* A*``, held structurally
     (``(A @ B).T == B.T @ A.T`` is an actual ``==``).
+
+    Construction rejects kind-mismatched junctions (e.g. ``Broadcast`` fed
+    by ``AllReduce`` over the same axis: the value is already stacked) with
+    a :class:`SpaceTypeError` — ill-typed programs fail before compilation.
+    Shard-shape-accurate checking is ``analysis/spaces.py::typecheck``.
     """
 
     ops: Tuple[LinearOp, ...]
+
+    def __post_init__(self):
+        if not self.ops:
+            raise SpaceTypeError("empty composite")
+        for i in range(len(self.ops) - 1):
+            # ops[i+1] is applied BEFORE ops[i] (matrix-product order).
+            _check_junction(producer=_applied_last(self.ops[i + 1]),
+                            consumer=_applied_first(self.ops[i]))
 
     def __call__(self, x):
         for op in reversed(self.ops):
@@ -137,11 +287,52 @@ class Compose(LinearOp):
         # (A B)* = B* A* — adjoints compose by reversal (paper §2).
         return Compose(tuple(op.T for op in reversed(self.ops)))
 
+    def space_map(self, space: Space, axis_sizes) -> Space:
+        """Fold the constituents' signatures in application order."""
+        for i, op in enumerate(reversed(self.ops)):
+            try:
+                space = op.space_map(space, axis_sizes)
+            except SpaceTypeError as e:
+                raise SpaceTypeError(
+                    f"position {i} (application order), {op!r}: {e}") from None
+        return space
+
     def in_spec(self, rank: int) -> P:
         return self.ops[-1].in_spec(rank)
 
     def out_spec(self, rank: int) -> P:
         return self.ops[0].out_spec(rank)
+
+
+def _applied_first(op: LinearOp) -> LinearOp:
+    """The constituent that touches the input first (innermost)."""
+    return _applied_first(op.ops[-1]) if isinstance(op, Compose) else op
+
+
+def _applied_last(op: LinearOp) -> LinearOp:
+    """The constituent that produces the output (outermost)."""
+    return _applied_last(op.ops[0]) if isinstance(op, Compose) else op
+
+
+def _check_junction(producer: LinearOp, consumer: LinearOp):
+    """Kind-level junction check: producer's codomain vs consumer's domain.
+
+    Only same-axis junctions are decidable without shapes: a value may be
+    stacked over one axis and replicated over another, so cross-axis
+    junctions defer to the shape-accurate ``analysis/spaces.py::typecheck``.
+    """
+    pk, ck = producer.CODOMAIN_KIND, consumer.DOMAIN_KIND
+    if "any" in (pk, ck) or pk == ck:
+        return
+    pax = getattr(producer, "axis", None)
+    cax = getattr(consumer, "axis", None)
+    if pax is None or cax is None or pax != cax:
+        return
+    raise SpaceTypeError(
+        f"ill-typed composite over axis '{cax}': {consumer!r} consumes the "
+        f"{ck} space but {producer!r} produces the {pk} space (paper §2: "
+        f"operators are maps between specific global spaces — insert the "
+        f"appropriate broadcast/reduce/gather)")
 
 
 @dataclass(frozen=True)
@@ -153,6 +344,10 @@ class Identity(LinearOp):
 
     def _adjoint(self):
         return self
+
+    def space_map(self, space, axis_sizes):
+        """I is the identity on any space."""
+        return space
 
     def in_spec(self, rank):
         return P()
@@ -172,11 +367,19 @@ class Broadcast(LinearOp):
 
     axis: str
 
+    DOMAIN_KIND = "replicated"
+    CODOMAIN_KIND = "stacked"
+
     def __call__(self, x):
         return prim.broadcast(x, self.axis)
 
     def _adjoint(self):
         return SumReduce(self.axis)
+
+    def space_map(self, space, axis_sizes):
+        """F^n -> F^{kn}: one copy in, k stacked copies out (Eq. 8)."""
+        _expect_replicated(self, space)
+        return Space.stacked(self.axis, 0, space.local_shape)
 
     def in_spec(self, rank):
         return P()
@@ -192,11 +395,19 @@ class SumReduce(LinearOp):
 
     axis: str
 
+    DOMAIN_KIND = "stacked"
+    CODOMAIN_KIND = "replicated"
+
     def __call__(self, x):
         return prim.sum_reduce(x, self.axis)
 
     def _adjoint(self):
         return Broadcast(self.axis)
+
+    def space_map(self, space, axis_sizes):
+        """F^{kn} -> F^n: the k realizations sum into one (Eq. 9)."""
+        _expect_stacked(self, space, dim=0)
+        return Space.replicated(space.local_shape)
 
     def in_spec(self, rank):
         return _axis_at(self.axis, 0, rank)
@@ -211,11 +422,19 @@ class AllReduce(LinearOp):
 
     axis: str
 
+    DOMAIN_KIND = "stacked"
+    CODOMAIN_KIND = "stacked"
+
     def __call__(self, x):
         return prim.all_reduce(x, self.axis)
 
     def _adjoint(self):
         return self
+
+    def space_map(self, space, axis_sizes):
+        """F^{kn} -> F^{kn}: an endomorphism of the stacked space."""
+        _expect_stacked(self, space, dim=0)
+        return space
 
     def in_spec(self, rank):
         return _axis_at(self.axis, 0, rank)
@@ -233,11 +452,22 @@ class AllGather(LinearOp):
     axis: str
     dim: int = 0
 
+    DOMAIN_KIND = "stacked"
+    CODOMAIN_KIND = "stacked"
+
     def __call__(self, x):
         return prim.all_gather(x, self.axis, self.dim)
 
     def _adjoint(self):
         return ReduceScatter(self.axis, self.dim)
+
+    def space_map(self, space, axis_sizes):
+        """Stacked at ``dim`` -> stacked at ``dim``, local extent times k."""
+        k = _axis_size(self, axis_sizes)
+        _expect_stacked(self, space, dim=self.dim)
+        shape = list(space.local_shape)
+        shape[self.dim] *= k
+        return Space.stacked(self.axis, self.dim, shape)
 
     def in_spec(self, rank):
         return _axis_at(self.axis, self.dim, rank)
@@ -255,11 +485,23 @@ class ReduceScatter(LinearOp):
     axis: str
     dim: int = 0
 
+    DOMAIN_KIND = "stacked"
+    CODOMAIN_KIND = "stacked"
+
     def __call__(self, x):
         return prim.reduce_scatter(x, self.axis, self.dim)
 
     def _adjoint(self):
         return AllGather(self.axis, self.dim)
+
+    def space_map(self, space, axis_sizes):
+        """Stacked at ``dim`` -> stacked at ``dim``, local extent over k."""
+        k = _axis_size(self, axis_sizes)
+        _expect_stacked(self, space, dim=self.dim)
+        _expect_divisible(self, space, self.dim, k)
+        shape = list(space.local_shape)
+        shape[self.dim] //= k
+        return Space.stacked(self.axis, self.dim, shape)
 
     def in_spec(self, rank):
         return _axis_at(self.axis, self.dim, rank)
@@ -277,11 +519,26 @@ class AllToAll(LinearOp):
     split_dim: int
     concat_dim: int
 
+    DOMAIN_KIND = "stacked"
+    CODOMAIN_KIND = "stacked"
+
     def __call__(self, x):
         return prim.all_to_all(x, self.axis, self.split_dim, self.concat_dim)
 
     def _adjoint(self):
         return AllToAll(self.axis, self.concat_dim, self.split_dim)
+
+    def space_map(self, space, axis_sizes):
+        """Stacking moves from ``concat_dim`` to ``split_dim`` (a block
+        permutation): concat extent times k, split extent over k."""
+        k = _axis_size(self, axis_sizes)
+        _expect_stacked(self, space, dim=self.concat_dim)
+        _expect_dim(self, space, self.split_dim)
+        _expect_divisible(self, space, self.split_dim, k)
+        shape = list(space.local_shape)
+        shape[self.concat_dim] *= k
+        shape[self.split_dim] //= k
+        return Space.stacked(self.axis, self.split_dim, shape)
 
     def in_spec(self, rank):
         return _axis_at(self.axis, self.concat_dim, rank)
@@ -300,11 +557,19 @@ class SendRecv(LinearOp):
     axis: str
     offset: int = 1
 
+    DOMAIN_KIND = "stacked"
+    CODOMAIN_KIND = "stacked"
+
     def __call__(self, x):
         return prim.send_recv(x, self.axis, self.offset)
 
     def _adjoint(self):
         return SendRecv(self.axis, -self.offset)
+
+    def space_map(self, space, axis_sizes):
+        """A (nilpotent-shift) endomorphism of the stacked space."""
+        _expect_stacked(self, space, dim=0)
+        return space
 
     def in_spec(self, rank):
         return _axis_at(self.axis, 0, rank)
@@ -337,11 +602,20 @@ class KVRingShift(LinearOp):
     axis: str
     offset: int = 1
 
+    DOMAIN_KIND = "stacked"
+    CODOMAIN_KIND = "stacked"
+
     def __call__(self, x):
         return prim.ring_shift(x, self.axis, self.offset)
 
     def _adjoint(self):
         return KVRingShift(self.axis, -self.offset)
+
+    def space_map(self, space, axis_sizes):
+        """An orthogonal (block-permutation) endomorphism of the stacked
+        space."""
+        _expect_stacked(self, space, dim=0)
+        return space
 
     def in_spec(self, rank):
         return _axis_at(self.axis, 0, rank)
@@ -363,11 +637,24 @@ class BatchScatter(LinearOp):
     axis: str
     dim: int = 0
 
+    DOMAIN_KIND = "replicated"
+    CODOMAIN_KIND = "stacked"
+
     def __call__(self, x):
         return prim.batch_scatter(x, self.axis, self.dim)
 
     def _adjoint(self):
         return GradSumReduce(self.axis, self.dim)
+
+    def space_map(self, space, axis_sizes):
+        """Replicated batch -> per-replica blocks stacked at ``dim``."""
+        k = _axis_size(self, axis_sizes)
+        _expect_replicated(self, space)
+        _expect_dim(self, space, self.dim)
+        _expect_divisible(self, space, self.dim, k)
+        shape = list(space.local_shape)
+        shape[self.dim] //= k
+        return Space.stacked(self.axis, self.dim, shape)
 
     def in_spec(self, rank):
         return P()
@@ -386,11 +673,22 @@ class GradSumReduce(LinearOp):
     axis: str
     dim: int = 0
 
+    DOMAIN_KIND = "stacked"
+    CODOMAIN_KIND = "replicated"
+
     def __call__(self, y):
         return prim.grad_sum_reduce(y, self.axis, self.dim)
 
     def _adjoint(self):
         return BatchScatter(self.axis, self.dim)
+
+    def space_map(self, space, axis_sizes):
+        """Per-replica blocks -> the replicated global batch (Eq. 9)."""
+        k = _axis_size(self, axis_sizes)
+        _expect_stacked(self, space, dim=self.dim)
+        shape = list(space.local_shape)
+        shape[self.dim] *= k
+        return Space.replicated(shape)
 
     def in_spec(self, rank):
         return _axis_at(self.axis, self.dim, rank)
@@ -405,6 +703,16 @@ def _as_widths(w) -> Tuple[int, ...] | None:
     if isinstance(w, int):
         raise TypeError("per-worker widths must be a sequence, got int")
     return tuple(int(v) for v in w)
+
+
+def _check_halo_widths(op, k: int):
+    """Unbalanced halos carry one width per worker: lengths must equal k."""
+    for name in ("left_widths", "right_widths"):
+        w = getattr(op, name)
+        if w is not None and len(w) != k:
+            raise SpaceTypeError(
+                f"{op!r} carries {len(w)} per-worker {name} but axis "
+                f"'{op.axis}' has {k} workers")
 
 
 @dataclass(frozen=True)
@@ -437,6 +745,9 @@ class HaloExchange(LinearOp):
             object.__setattr__(self, "left", int(max(self.left_widths)))
             object.__setattr__(self, "right", int(max(self.right_widths)))
 
+    DOMAIN_KIND = "stacked"
+    CODOMAIN_KIND = "stacked"
+
     @property
     def unbalanced(self) -> bool:
         return self.left_widths is not None
@@ -450,6 +761,19 @@ class HaloExchange(LinearOp):
     def _adjoint(self):
         return HaloAccumulate(self.axis, self.dim, self.left, self.right,
                               self.left_widths, self.right_widths)
+
+    def space_map(self, space, axis_sizes):
+        """Stacked at ``dim`` -> stacked at ``dim`` with margins attached."""
+        k = _axis_size(self, axis_sizes)
+        _expect_stacked(self, space, dim=self.dim)
+        _check_halo_widths(self, k)
+        if space.local_shape[self.dim] < max(self.left, self.right):
+            raise SpaceTypeError(
+                f"{self!r} needs bulk >= max margin {max(self.left, self.right)}"
+                f" along dim {self.dim}, got {space.describe()}")
+        shape = list(space.local_shape)
+        shape[self.dim] += self.left + self.right
+        return Space.stacked(self.axis, self.dim, shape)
 
     def in_spec(self, rank):
         return _axis_at(self.axis, self.dim, rank)
@@ -483,6 +807,9 @@ class HaloAccumulate(LinearOp):
             object.__setattr__(self, "left", int(max(self.left_widths)))
             object.__setattr__(self, "right", int(max(self.right_widths)))
 
+    DOMAIN_KIND = "stacked"
+    CODOMAIN_KIND = "stacked"
+
     def __call__(self, y):
         if self.left_widths is not None:
             y = _unbalanced_mask(y, self.axis, self.dim, self.left, self.right,
@@ -492,6 +819,22 @@ class HaloAccumulate(LinearOp):
     def _adjoint(self):
         return HaloExchange(self.axis, self.dim, self.left, self.right,
                             self.left_widths, self.right_widths)
+
+    def space_map(self, space, axis_sizes):
+        """Stacked at ``dim`` -> stacked at ``dim`` with margins folded back
+        into the bulk (the remaining bulk must itself fit the margins, so
+        the adjoint HaloExchange stays applicable — involution)."""
+        k = _axis_size(self, axis_sizes)
+        _expect_stacked(self, space, dim=self.dim)
+        _check_halo_widths(self, k)
+        bulk = space.local_shape[self.dim] - self.left - self.right
+        if bulk < max(self.left, self.right, 1):
+            raise SpaceTypeError(
+                f"{self!r} would leave bulk {bulk} < max(margins, 1) along "
+                f"dim {self.dim}, got {space.describe()}")
+        shape = list(space.local_shape)
+        shape[self.dim] = bulk
+        return Space.stacked(self.axis, self.dim, shape)
 
     def in_spec(self, rank):
         return _axis_at(self.axis, self.dim, rank)
@@ -518,6 +861,32 @@ def _unbalanced_mask(y, axis, dim, lmax, rmax, left_widths, right_widths):
 # The generic Eq. 13 harness.
 # ---------------------------------------------------------------------------
 
+def space_of(spec: P, global_shape, axis_sizes) -> Space:
+    """The :class:`Space` a global array occupies under a boundary spec.
+
+    ``P()``/all-None -> replicated; a single mesh axis at dim d -> stacked
+    there (the global extent must divide by the axis size).  Multi-axis
+    specs have no single-axis space reading and raise ``SpaceTypeError``.
+    """
+    entries = tuple(spec) + (None,) * (len(global_shape) - len(tuple(spec)))
+    placed = [(d, a) for d, a in enumerate(entries) if a is not None]
+    if not placed:
+        return Space.replicated(global_shape)
+    if len(placed) > 1 or not isinstance(placed[0][1], str):
+        raise SpaceTypeError(
+            f"spec {spec} shards more than one mesh axis — no single-axis "
+            f"space reading (see analysis/spaces.py)")
+    d, axis = placed[0]
+    k = axis_sizes if isinstance(axis_sizes, int) else int(axis_sizes[axis])
+    if global_shape[d] % k:
+        raise SpaceTypeError(
+            f"global dim {d} of shape {tuple(global_shape)} does not divide "
+            f"by axis '{axis}' size {k}")
+    local = list(global_shape)
+    local[d] //= k
+    return Space.stacked(axis, d, local)
+
+
 def lift(op: LinearOp, mesh, rank: int):
     """Lift an op to a global operator F via shard_map over its canonical
     boundary specs (the paper's inclusive-memory global view)."""
@@ -532,7 +901,9 @@ def check_adjoint(op: LinearOp, mesh, shape, *, key=None, eps: float = 1e-4,
     must divide by the mesh axis size).  Verifies both that ``op.T`` is the
     adjoint of ``op`` under the Euclidean inner product, and that AD
     (jax.vjp) through the forward agrees — the returned report carries the
-    max of the two relative errors.
+    max of the two relative errors.  When a COMPOSITE fails, the report's
+    ``detail`` localizes the first failing constituent by position and its
+    space signature (instead of a bare numeric mismatch).
     """
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -555,4 +926,35 @@ def check_adjoint(op: LinearOp, mesh, shape, *, key=None, eps: float = 1e-4,
     rel_pair = float(np.asarray(jax.device_get(jnp.abs(lhs - rhs) / denom)))
 
     rel_vjp = adjoint_test(F, x, y, name=name, eps=eps).rel_err
-    return AdjointReport(name, max(rel_pair, rel_vjp), eps)
+    rel = max(rel_pair, rel_vjp)
+    detail = ""
+    if rel > eps and isinstance(op, Compose):
+        detail = _localize_failure(op, mesh, shape, key=key, eps=eps)
+    return AdjointReport(name, rel, eps, detail=detail)
+
+
+def _localize_failure(op: Compose, mesh, shape, *, key, eps) -> str:
+    """Walk a failing composite's space trace, Eq.13-testing each
+    constituent at its own global shape, and name the first failing
+    position + space signature.  Best-effort: never masks the primary
+    failure, so any diagnostic error degrades to an empty string."""
+    try:
+        sizes = {a: int(s) for a, s in dict(mesh.shape).items()}
+        space = space_of(op.ops[-1].in_spec(len(shape)), shape, sizes)
+        for i, o in enumerate(reversed(op.ops)):
+            try:
+                new = o.space_map(space, sizes)
+            except SpaceTypeError as e:
+                return (f"chain is ill-typed at position {i} "
+                        f"(application order): {e}")
+            sub = check_adjoint(o, mesh, space.global_shape(sizes),
+                                key=key, eps=eps)
+            if not sub.passed:
+                return (f"first failing op: position {i} (application "
+                        f"order) {o!r}, mapping {space.describe()} -> "
+                        f"{new.describe()}; rel_err={sub.rel_err:.3g}")
+            space = new
+        return ("every constituent passes Eq. 13 individually; "
+                "the failure is in the composition")
+    except Exception:  # noqa: BLE001 — diagnostics must not mask the report
+        return ""

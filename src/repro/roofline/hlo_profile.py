@@ -5,6 +5,10 @@ lowered IR (the §Perf methodology): largest live tensors (memory suspects),
 per-opcode byte totals (fusion/dtype waste), collective inventory, and
 duplicate-computation hints (remat recompute).
 
+``parse_instructions`` is the ONE compiled-module parser every consumer
+shares — the byte/inventory reports here and the anti-pattern rules in
+``analysis/hlo_lint.py``.
+
   PYTHONPATH=src python -m repro.roofline.hlo_profile --arch X --shape Y
 """
 
@@ -12,6 +16,7 @@ from __future__ import annotations
 
 import re
 from collections import Counter, defaultdict
+from dataclasses import dataclass
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -38,14 +43,60 @@ def shape_bytes(shape_str: str) -> int:
     return total
 
 
+# A computation header: ``%name (params) -> result {`` (optionally ENTRY).
+# Instruction lines always carry ``=``; headers never do.
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+
+
+@dataclass(frozen=True)
+class HloInstruction:
+    """One parsed HLO instruction line (the shared compiled-module view)."""
+
+    name: str
+    opcode: str
+    shape_str: str
+    line: str
+    lineno: int
+    computation: str
+
+    @property
+    def base_opcode(self) -> str:
+        """Opcode with the async ``-start``/``-done`` suffix stripped."""
+        return self.opcode.removesuffix("-start").removesuffix("-done")
+
+    @property
+    def out_bytes(self) -> int:
+        """Per-device bytes of the instruction's output."""
+        return shape_bytes(self.shape_str)
+
+
+def parse_instructions(hlo: str) -> list[HloInstruction]:
+    """Parse an HLO text module into instruction records, one per line,
+    tagged with the enclosing computation — THE parser shared by the
+    reports below, ``seq_dim_allgather_bytes`` and ``analysis/hlo_lint``."""
+    out = []
+    comp = ""
+    for lineno, line in enumerate(hlo.splitlines(), start=1):
+        if "=" not in line:
+            hm = _COMP_RE.match(line)
+            if hm:
+                comp = hm.group(1)
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape_str, opcode = m.groups()
+            out.append(HloInstruction(name, opcode, shape_str.strip(),
+                                      line, lineno, comp))
+    return out
+
+
 def top_tensors(hlo: str, k: int = 20):
     """Largest instruction outputs (per-device bytes) with opcode."""
     rows = []
-    for m in _INSTR_RE.finditer(hlo):
-        name, shape_str, opcode = m.groups()
-        b = shape_bytes(shape_str)
+    for ins in parse_instructions(hlo):
+        b = ins.out_bytes
         if b:
-            rows.append((b, opcode, name, shape_str.strip()[:90]))
+            rows.append((b, ins.opcode, ins.name, ins.shape_str[:90]))
     rows.sort(reverse=True)
     # dedupe identical (opcode, shape) repeats into counts
     agg = Counter()
@@ -62,11 +113,9 @@ def top_tensors(hlo: str, k: int = 20):
 def opcode_bytes(hlo: str, k: int = 15):
     """Total output bytes per opcode — dtype/fusion waste hotspots."""
     agg = defaultdict(lambda: [0, 0])
-    for m in _INSTR_RE.finditer(hlo):
-        _, shape_str, opcode = m.groups()
-        b = shape_bytes(shape_str)
-        agg[opcode][0] += b
-        agg[opcode][1] += 1
+    for ins in parse_instructions(hlo):
+        agg[ins.opcode][0] += ins.out_bytes
+        agg[ins.opcode][1] += 1
     rows = sorted(((v[0], v[1], op) for op, v in agg.items()), reverse=True)
     return rows[:k]
 
@@ -90,13 +139,34 @@ def collective_inventory(hlo: str) -> dict:
     the coarse comm picture a mesh-factorization change shifts (e.g. CP
     turns sequence all-gathers into collective-permutes)."""
     agg = {}
-    for m in _INSTR_RE.finditer(hlo):
-        _, shape_str, opcode = m.groups()
-        base = opcode.removesuffix("-start").removesuffix("-done")
+    for ins in parse_instructions(hlo):
+        base = ins.base_opcode
         if base in _COLLECTIVES:
             c, b = agg.get(base, (0, 0))
-            agg[base] = (c + 1, b + shape_bytes(shape_str))
+            agg[base] = (c + 1, b + ins.out_bytes)
     return agg
+
+
+def seq_gather_bytes(ins: HloInstruction, seq_len: int) -> int:
+    """Bytes ``ins`` all-gathers along the sequence dimension (0 if it is
+    not a sequence-dim all-gather) — the per-instruction predicate behind
+    ``seq_dim_allgather_bytes`` and ``analysis/hlo_lint``'s rule."""
+    m = _AG_RE.search(ins.line)
+    if not m:
+        return 0
+    dtype, out_dims, in_dims = (m.group(1), _dims(m.group(2)),
+                                _dims(m.group(3)))
+    dm = _DIMS_RE.search(ins.line)
+    if dm is None:
+        return 0
+    d = int(dm.group(1))
+    if (d < len(out_dims) and d < len(in_dims)
+            and out_dims[d] == seq_len and in_dims[d] < seq_len):
+        n = _DTYPE_BYTES.get(dtype, 4)
+        for dim in out_dims:
+            n *= dim
+        return n
+    return 0
 
 
 def seq_dim_allgather_bytes(hlo: str, seq_len: int) -> int:
@@ -111,24 +181,8 @@ def seq_dim_allgather_bytes(hlo: str, seq_len: int) -> int:
     on the compiled train step (tests/md/test_ring_attention.py,
     benchmarks/run.py::bench_ring_attention).
     """
-    total = 0
-    for line in hlo.splitlines():
-        m = _AG_RE.search(line)
-        if not m:
-            continue
-        dtype, out_dims, in_dims = (m.group(1), _dims(m.group(2)),
-                                    _dims(m.group(3)))
-        dm = _DIMS_RE.search(line)
-        if dm is None:
-            continue
-        d = int(dm.group(1))
-        if (d < len(out_dims) and d < len(in_dims)
-                and out_dims[d] == seq_len and in_dims[d] < seq_len):
-            n = _DTYPE_BYTES.get(dtype, 4)
-            for dim in out_dims:
-                n *= dim
-            total += n
-    return total
+    return sum(seq_gather_bytes(ins, seq_len)
+               for ins in parse_instructions(hlo))
 
 
 def peak_activation_bytes(hlo: str, min_rank: int = 3) -> int:
@@ -138,9 +192,8 @@ def peak_activation_bytes(hlo: str, min_rank: int = 3) -> int:
     activation-shaped values (q/k/v, score tiles, gathered residuals), and
     under context parallelism the largest one shrinks ~cp-fold."""
     peak = 0
-    for m in _INSTR_RE.finditer(hlo):
-        _, shape_str, _ = m.groups()
-        for dtype, dims in _SHAPE_RE.findall(shape_str):
+    for ins in parse_instructions(hlo):
+        for dtype, dims in _SHAPE_RE.findall(ins.shape_str):
             if dtype not in _DTYPE_BYTES:
                 continue
             dd = _dims(dims)

@@ -4,9 +4,13 @@ operator chains, not a hand-picked list.
 Each example draws a mesh-axis choice, a starting shape, and a chain of
 1-5 ``LinearOp``s whose boundary *spaces* compose (the paper's operators
 are maps between specific global vector spaces — replicated F^n vs
-k-worker-stacked F^{kn} — so the generator tracks the space signature
-between ops instead of sampling ill-typed composites), then asserts:
+k-worker-stacked F^{kn}).  The generator samples from the SHARED space
+registry ``repro.analysis.spaces`` (``legal_moves``/``apply_move`` driven
+by each op's own ``space_map``) instead of a hand-rolled tracker, so the
+fuzzer and the static typechecker can never drift; each sampled chain is
+additionally run through ``typecheck`` before touching a device.  Asserts:
 
+  - ``typecheck``: every sampled chain is statically well-typed;
   - ``check_adjoint``: <Ax, y> == <x, A*y> under the lifted global
     operators AND jax.vjp coherence (paper Eq. 13), on real devices;
   - the §2 reversal law ``(A @ B).T == B.T @ A.T``, structurally.
@@ -20,8 +24,9 @@ import jax
 from hypothesis_compat import HealthCheck, given, settings, strategies as st
 
 from repro import compat
+from repro.analysis import spaces
 from repro.core import linop
-from repro.core.linop import check_adjoint
+from repro.core.linop import Space, check_adjoint
 
 MAX_DIM = 256          # cap local growth (all_gather/grad_sum_reduce x k)
 N_EXAMPLES = 60        # >= 50 random composites per CI run
@@ -44,107 +49,29 @@ def _axis_choices():
 _CHOICES = _axis_choices()
 
 
-def _moves(ax, k, sig, ls):
-    """Ops applicable in state (sig, ls): sig is None for the replicated
-    space, or the sharded tensor dim; ls is the LOCAL shard shape."""
-    rank = len(ls)
-    mv = [("identity", None)] if sig is None else []
-    if sig is None:
-        mv.append(("broadcast", None))
-        for d in range(rank):
-            if ls[d] % k == 0:
-                mv.append(("batch_scatter", d))
-    else:
-        d = sig
-        if d == 0:
-            mv += [("sum_reduce", None), ("all_reduce", None),
-                   ("send_recv", -2), ("send_recv", -1),
-                   ("send_recv", 1), ("send_recv", 2),
-                   ("kv_ring_shift", -2), ("kv_ring_shift", -1),
-                   ("kv_ring_shift", 1), ("kv_ring_shift", 2)]
-        if ls[d] * k <= MAX_DIM:
-            mv += [("grad_sum_reduce", None), ("all_gather", None)]
-        if ls[d] % k == 0:
-            mv.append(("reduce_scatter", None))
-        for s in range(rank):
-            if s != d and ls[s] % k == 0 and ls[d] * k <= MAX_DIM:
-                mv.append(("all_to_all", s))
-        for left, right in ((0, 1), (1, 0), (1, 1), (2, 1), (2, 2)):
-            if ls[d] >= max(left, right) and ls[d] + left + right <= MAX_DIM:
-                mv.append(("halo", (left, right)))
-            if ls[d] - left - right >= max(left, right, 1):
-                mv.append(("halo_acc", (left, right)))
-    return mv
-
-
-def _apply(ax, k, sig, ls, move):
-    """Materialize a move: returns (op, new_sig, new_local_shape)."""
-    kind, arg = move
-    ls = list(ls)
-    if kind == "identity":
-        return linop.Identity(), None, ls
-    if kind == "broadcast":
-        return linop.Broadcast(ax), 0, ls
-    if kind == "batch_scatter":
-        ls[arg] //= k
-        return linop.BatchScatter(ax, arg), arg, ls
-    d = sig
-    if kind == "sum_reduce":
-        return linop.SumReduce(ax), None, ls
-    if kind == "all_reduce":
-        return linop.AllReduce(ax), d, ls
-    if kind == "send_recv":
-        return linop.SendRecv(ax, arg), d, ls
-    if kind == "kv_ring_shift":
-        # periodic sibling of send_recv: same stacked space, cyclic perm
-        return linop.KVRingShift(ax, arg), d, ls
-    if kind == "grad_sum_reduce":
-        ls[d] *= k
-        return linop.GradSumReduce(ax, d), None, ls
-    if kind == "all_gather":
-        ls[d] *= k
-        return linop.AllGather(ax, d), d, ls
-    if kind == "reduce_scatter":
-        ls[d] //= k
-        return linop.ReduceScatter(ax, d), d, ls
-    if kind == "all_to_all":
-        s = arg
-        ls[d] *= k
-        ls[s] //= k
-        return linop.AllToAll(ax, s, d), s, ls
-    if kind == "halo":
-        left, right = arg
-        ls[d] += left + right
-        return linop.HaloExchange(ax, d, left, right), d, ls
-    if kind == "halo_acc":
-        left, right = arg
-        ls[d] -= left + right
-        return linop.HaloAccumulate(ax, d, left, right), d, ls
-    raise AssertionError(kind)
-
-
 def _draw_chain(data, ax, k):
-    """A space-typed random chain: (ops in application order, global shape)."""
+    """A space-typed random chain sampled from the SHARED registry
+    (repro.analysis.spaces): (ops in application order, start Space)."""
     rank = data.draw(st.integers(2, 3))
     if data.draw(st.integers(0, 1)):
         sig = data.draw(st.integers(0, rank - 1))
         ls = [data.draw(st.integers(1, 4)) for _ in range(rank)]
+        space = Space.stacked(ax, sig, ls)
     else:
-        sig = None
         # replicated start: dims are multiples of k so BatchScatter is live
-        ls = [k * data.draw(st.integers(1, 2)) for _ in range(rank)]
-    gshape = list(ls)
-    if sig is not None:
-        gshape[sig] *= k
+        space = Space.replicated(
+            [k * data.draw(st.integers(1, 2)) for _ in range(rank)])
+    space0 = space
     n_ops = data.draw(st.integers(1, 5))
     ops = []
     for _ in range(n_ops):
-        mv = _moves(ax, k, sig, ls)
+        mv = spaces.legal_moves(ax, k, space, max_dim=MAX_DIM)
         if not mv:
             break
-        op, sig, ls = _apply(ax, k, sig, ls, data.draw(st.sampled_from(mv)))
+        op, space = spaces.apply_move(ax, k, space,
+                                      data.draw(st.sampled_from(mv)))
         ops.append(op)
-    return ops, tuple(gshape)
+    return ops, space0
 
 
 @settings(max_examples=N_EXAMPLES, deadline=None,
@@ -152,10 +79,15 @@ def _draw_chain(data, ax, k):
 @given(data=st.data())
 def test_random_composites_pass_eq13_and_reversal(data):
     mesh, ax, k = _CHOICES[data.draw(st.integers(0, len(_CHOICES) - 1))]
-    ops, gshape = _draw_chain(data, ax, k)
+    ops, space0 = _draw_chain(data, ax, k)
     chain = ops[0]
     for op in ops[1:]:
         chain = op @ chain
+    # The static judgment accepts every sampled chain (generator and
+    # typechecker share one registry, so this can only fail if the chain
+    # builder itself drifts).
+    spaces.typecheck(chain, {ax: k}, space0)
+    gshape = space0.global_shape(k)
     # Eq. 13 on real devices, for the composite AND (implicitly) every
     # custom-vjp rule inside it.
     r = check_adjoint(chain, mesh, gshape,

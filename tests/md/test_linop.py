@@ -79,7 +79,11 @@ COMPOSITES = [
     # the ring-attention round trip: a full ring of k cyclic hops is the
     # identity permutation (DESIGN §6); and a hop composed with its adjoint
     (linop.KVRingShift(AX, -1) @ linop.KVRingShift(AX, 1), (16, 3)),
-    (linop.AllGather(AX, 1) @ linop.KVRingShift(AX, 1), (16, 4)),
+    # gather the rotated shards back — stays in the dim-0 stacked space, so
+    # the chain is also CANONICALLY typed (analysis/spaces.py accepts it;
+    # the dim-mismatched AllGather(AX, 1) variant passes Eq. 13 too but has
+    # no single consistent space reading — see tests/test_spaces.py)
+    (linop.AllGather(AX, 0) @ linop.KVRingShift(AX, 1), (16, 4)),
 ]
 
 

@@ -1,0 +1,191 @@
+"""Compiled-HLO lint rules (repro.analysis.hlo_lint; DESIGN §7).
+
+Each rule is exercised against a deliberately-broken hand-crafted HLO
+module (the violation injected in text form, so no multi-device compile is
+needed in tier-1), plus one REAL single-device compiled program that must
+lint clean.  The 8-device end-to-end check (CP quickstart clean, SP
+quickstart fires seq-dim-allgather) lives in
+``python -m repro.analysis.hlo_lint --quickstart`` and runs in CI's
+static-analysis job.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo_lint import (RULES, Finding, format_findings,
+                                     lint_compiled, lint_hlo)
+
+# A conditional whose true branch contains an all-reduce — the divergent
+# SPMD deadlock class — next to a safe branch and a safe while-style body.
+DIVERGENT = """\
+HloModule divergent
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%branch_true (p: f32[8,16]) -> f32[8,16] {
+  %p = f32[8,16] parameter(0)
+  ROOT %ar = f32[8,16] all-reduce(%p), replica_groups={}, to_apply=%add
+}
+
+%branch_false (q: f32[8,16]) -> f32[8,16] {
+  %q = f32[8,16] parameter(0)
+  ROOT %n = f32[8,16] negate(%q)
+}
+
+ENTRY %main (pred: pred[], x: f32[8,16]) -> f32[8,16] {
+  %pred = pred[] parameter(0)
+  %x = f32[8,16] parameter(1)
+  %safe = f32[8,16] all-reduce(%x), replica_groups={}, to_apply=%add
+  ROOT %c = f32[8,16] conditional(%pred, %x, %x), true_computation=%branch_true, false_computation=%branch_false
+}
+"""
+
+ADJACENT = """\
+HloModule adjacent
+
+ENTRY %main (x: f32[4,4]) -> f32[4,4] {
+  %x = f32[4,4] parameter(0)
+  %ar1 = f32[4,4] all-reduce(%x), replica_groups={}, to_apply=%add
+  ROOT %ar2 = f32[4,4] all-reduce(%ar1), replica_groups={}, to_apply=%add
+}
+"""
+
+ASYNC_PAIR = """\
+HloModule async_pair
+
+ENTRY %main (x: f32[4,4]) -> f32[4,4] {
+  %x = f32[4,4] parameter(0)
+  %s = f32[4,4] all-reduce-start(%x), replica_groups={}, to_apply=%add
+  ROOT %d = f32[4,4] all-reduce-done(%s)
+}
+"""
+
+SEQ_GATHER = """\
+HloModule seq_gather
+
+ENTRY %main (x: f32[8,12,64]) -> f32[8,96,64] {
+  %x = f32[8,12,64] parameter(0)
+  ROOT %ag = f32[8,96,64] all-gather(f32[8,12,64] %x), channel_id=1, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={1}
+}
+"""
+
+NO_COLLECTIVES = """\
+HloModule quiet
+
+ENTRY %main (x: f32[2,3,4]) -> f32[2,3,4] {
+  %x = f32[2,3,4] parameter(0)
+  ROOT %n = f32[2,3,4] negate(%x)
+}
+"""
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+def test_divergent_collective_flagged_with_branch_name():
+    """The all-reduce in the conditional's branch computation is an error;
+    the IDENTICAL all-reduce in the entry computation is not."""
+    fs = lint_hlo(DIVERGENT)
+    assert _rules(fs) == ["divergent-collective"]
+    f = fs[0]
+    assert f.severity == "error" and f.opcode == "all-reduce"
+    assert "branch_true" in f.message and f.lineno > 0
+    assert f.bytes == 8 * 16 * 4
+
+
+def test_adjacent_allreduces_warn_but_async_pair_does_not():
+    fs = lint_hlo(ADJACENT)
+    assert _rules(fs) == ["adjacent-allreduce"]
+    assert fs[0].severity == "warning"
+    assert fs[0].bytes == 2 * 4 * 4 * 4  # both outputs counted
+    assert lint_hlo(ASYNC_PAIR) == []  # start/done is ONE collective
+
+
+def test_seq_dim_allgather_requires_ctx_live():
+    """The rule only arms when the caller declares ctx live AND names S —
+    the same gather in a pure-TP program is legitimate."""
+    assert lint_hlo(SEQ_GATHER) == []
+    assert lint_hlo(SEQ_GATHER, seq_len=96) == []
+    fs = lint_hlo(SEQ_GATHER, seq_len=96, ctx_live=True)
+    assert _rules(fs) == ["seq-dim-allgather"]
+    assert fs[0].bytes == 8 * 96 * 64 * 4
+    # Wrong S: the structural scan must not alias other dims.
+    assert lint_hlo(SEQ_GATHER, seq_len=64, ctx_live=True) == []
+
+
+def test_missing_grad_reduce():
+    fs = lint_hlo(NO_COLLECTIVES, grad_reduce_axes=("data",))
+    assert _rules(fs) == ["missing-grad-reduce"]
+    assert "data" in fs[0].message
+    # A module WITH an all-reduce satisfies the declaration.
+    assert lint_hlo(ADJACENT, grad_reduce_axes=("data",),
+                    ) == lint_hlo(ADJACENT)
+
+
+def test_activation_budget():
+    peak = 2 * 3 * 4 * 4  # the rank-3 f32[2,3,4] tensor
+    assert lint_hlo(NO_COLLECTIVES, activation_budget_bytes=peak) == []
+    fs = lint_hlo(NO_COLLECTIVES, activation_budget_bytes=peak - 1)
+    assert _rules(fs) == ["activation-budget"]
+    assert fs[0].bytes == peak
+
+
+def test_errors_sort_before_warnings():
+    combined = DIVERGENT + "\n" + ADJACENT.replace("%main", "%main2")
+    fs = lint_hlo(combined)
+    sev = [f.severity for f in fs]
+    assert sev == sorted(sev, key=lambda s: s != "error")
+    assert set(_rules(fs)) == {"divergent-collective", "adjacent-allreduce"}
+
+
+def test_every_rule_id_is_documented():
+    for rule in ("seq-dim-allgather", "divergent-collective",
+                 "adjacent-allreduce", "missing-grad-reduce",
+                 "activation-budget"):
+        assert rule in RULES
+
+
+def test_finding_to_dict_roundtrip():
+    f = Finding("adjacent-allreduce", "warning", "msg", opcode="all-reduce",
+                bytes=128, lineno=7)
+    d = f.to_dict()
+    assert d["rule"] == "adjacent-allreduce" and d["bytes"] == 128
+    assert Finding(**d) == f
+
+
+def test_format_findings():
+    assert format_findings([]) == "hlo_lint: clean"
+    out = format_findings(lint_hlo(ADJACENT))
+    assert "WARNING" in out and "adjacent-allreduce" in out
+
+
+def test_real_compiled_program_lints_clean():
+    """An actual jitted train-ish step on the host device carries no
+    divergent collectives, no adjacent all-reduces — the lint must not
+    false-positive on real XLA output."""
+    def step(w, x):
+        y = jnp.tanh(x @ w)
+        return jnp.where(y.sum() > 0, y, -y).sum()
+
+    w = jnp.ones((8, 8))
+    x = jnp.ones((4, 8))
+    compiled = jax.jit(jax.grad(step)).lower(w, x).compile()
+    fs = lint_compiled(compiled, seq_len=4, ctx_live=True,
+                       activation_budget_bytes=1 << 30)
+    assert fs == [], format_findings(fs)
+
+
+def test_malformed_hlo_is_not_fatal():
+    """Garbage text yields zero findings, never an exception — the lint is
+    advisory and must not take down a bench run."""
+    assert lint_hlo("not hlo at all\n= = =\n") == []
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,134 @@
+"""Repo-invariant AST lint (tools/lint_repro.py; DESIGN §7).
+
+Runs the linter in-process over synthetic sources (one per rule, plus the
+tricky non-violations: pragma'd lines, while-loop collectives, untainted
+branches) and over the REAL repo, which must be clean — the same gate CI's
+static-analysis job enforces with ``python tools/lint_repro.py``.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+import lint_repro  # noqa: E402
+
+
+def _lint(path, src):
+    """Lint one synthetic file against the real repo registry context."""
+    sources = lint_repro.repo_sources()
+    sources[path] = src
+    return [f for f in lint_repro.lint_sources(sources) if f.path == path]
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+def test_repo_is_clean():
+    """The whole repo passes its own lint (CI acceptance criterion)."""
+    findings = lint_repro.lint_sources(lint_repro.repo_sources())
+    assert findings == [], "\n".join(
+        f"{f.path}:{f.lineno} {f.rule} {f.message}" for f in findings)
+
+
+def test_self_test_passes():
+    """The tool's built-in per-rule injection harness agrees."""
+    assert lint_repro.self_test() == 0
+
+
+def test_unregistered_linop_subclass():
+    """A LinearOp subclass without ``_adjoint`` trips R1; one absent from
+    the Eq. 13 registries trips R2 (CI's forced violation)."""
+    src = (
+        "from repro.core.linop import LinearOp\n"
+        "class GhostOp(LinearOp):\n"
+        "    def __call__(self, x):\n"
+        "        return x\n")
+    fs = _lint("src/repro/_t_ghost.py", src)
+    assert _rules(fs) == ["adjoint-not-registered", "op-not-in-registry"]
+    # Registry rules only police src/repro — a helper class in tests/ or
+    # benchmarks/ is not an operator-algebra citizen.
+    assert _lint("tests/_t_ghost.py", src) == []
+
+
+def test_registered_linop_subclass_is_clean():
+    """Defining ``_adjoint`` and carrying a registered NAME satisfies both
+    registry rules (AllGather is in the Eq. 13 and space registries)."""
+    src = (
+        "from repro.core.linop import LinearOp\n"
+        "class AllGather(LinearOp):\n"
+        "    def _adjoint(self):\n"
+        "        return self\n")
+    assert _lint("src/repro/_t_ok.py", src) == []
+
+
+def test_bare_shard_map():
+    src = (
+        "from jax.experimental.shard_map import shard_map\n"
+        "def g(f, mesh):\n"
+        "    return shard_map(f, mesh=mesh, in_specs=(), out_specs=())\n")
+    fs = _lint("src/repro/rogue_map.py", src)
+    assert _rules(fs) == ["bare-shard-map"]
+    # The allowed homes keep their shard_map calls.
+    assert _lint("src/repro/core/compile.py", src) == []
+
+
+def test_divergent_collective_taint():
+    """psum under an ``if`` on an axis_index-derived value is flagged —
+    including through an intermediate assignment."""
+    src = (
+        "from jax import lax\n"
+        "def f(x):\n"
+        "    i = lax.axis_index('tp')\n"
+        "    phase = i % 2\n"
+        "    if phase == 0:\n"
+        "        x = lax.psum(x, 'tp')\n"
+        "    return x\n")
+    fs = _lint("src/repro/_t_div.py", src)
+    assert _rules(fs) == ["divergent-collective"]
+    assert fs[0].lineno == 6
+
+
+def test_untainted_branch_and_uniform_collective_are_clean():
+    """An ``if`` on a config value (uniform across workers) may guard a
+    collective; a collective NOT under any if is always fine."""
+    src = (
+        "from jax import lax\n"
+        "def f(x, cfg):\n"
+        "    if cfg.use_psum:\n"
+        "        x = lax.psum(x, 'tp')\n"
+        "    return lax.pmean(x, 'tp')\n")
+    assert _lint("src/repro/_t_uniform.py", src) == []
+
+
+def test_pragma_suppresses():
+    src = (
+        "from jax import lax\n"
+        "def f(x):\n"
+        "    i = lax.axis_index('tp')\n"
+        "    if i == 0:\n"
+        "        x = lax.psum(x, 'tp')  # repro-lint: allow\n"
+        "    return x\n")
+    assert _lint("src/repro/_t_pragma.py", src) == []
+
+
+def test_deprecated_dist_call():
+    src = (
+        "from repro.core import layers as L\n"
+        "def h(x, p, mesh):\n"
+        "    return L.dist_affine(mesh, x, p, None)\n")
+    fs = _lint("src/repro/_t_dep.py", src)
+    assert _rules(fs) == ["deprecated-dist-call"]
+    # tests/ call the shims to test them; that is not a violation.
+    assert _lint("tests/_t_dep.py", src) == []
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    fs = _lint("src/repro/_t_bad.py", "def broken(:\n")
+    assert _rules(fs) == ["syntax-error"]
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

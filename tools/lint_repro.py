@@ -1,0 +1,407 @@
+"""Repo-invariant AST lint (the third static-analysis pass; DESIGN §7).
+
+Rules, each enforcing an invariant the adjoint algebra depends on:
+
+  R1 adjoint-not-registered    every ``LinearOp`` subclass defines
+                               ``_adjoint`` in its OWN body (an inherited
+                               adjoint silently returns the parent type,
+                               breaking ``.T`` involution structurally).
+  R2 op-not-in-registry        every ``LinearOp`` subclass appears in the
+                               Eq. 13 registries (tests/md/test_linop.py or
+                               tests/md/test_pipeline.py) AND the shared
+                               space registry (src/repro/analysis/spaces.py)
+                               the fuzzer samples.
+  R3 bare-shard-map            no ``shard_map`` call outside compat.py /
+                               core/compile.py / core/primitives.py — every
+                               manual region goes through dist_jit/smap.
+  R4 divergent-collective      no collective call lexically inside a Python
+                               ``if`` whose test is tainted by
+                               ``axis_index`` (the statically decidable
+                               slice of "if on a traced value"): divergent
+                               workers deadlock; predicate with jnp.where.
+  R5 deprecated-dist-call      no calls to the deprecated per-layer
+                               ``dist_*`` shims outside their home
+                               (core/layers.py) — use the context-aware
+                               layer API under dist_jit.
+
+A line containing ``# repro-lint: allow`` is exempt (used by benchmark
+baselines that measure the deprecated path on purpose).
+
+  python tools/lint_repro.py [--json] [--self-test]
+
+``--self-test`` injects one synthetic violation per rule and asserts each
+is caught (CI's injected-violation leg for this pass).
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import pathlib
+import re
+import sys
+from dataclasses import asdict, dataclass
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+SCAN_DIRS = ("src", "benchmarks", "examples", "tools", "tests")
+SHARD_MAP_ALLOWED = {
+    "src/repro/compat.py",
+    "src/repro/core/compile.py",
+    "src/repro/core/primitives.py",
+}
+EQ13_REGISTRIES = ("tests/md/test_linop.py", "tests/md/test_pipeline.py")
+SPACE_REGISTRY = "src/repro/analysis/spaces.py"
+DEPRECATED_HOME = "src/repro/core/layers.py"
+
+LAX_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "ppermute", "pshuffle",
+                   "all_gather", "all_to_all", "psum_scatter"}
+PRIM_COLLECTIVES = {"broadcast", "sum_reduce", "all_reduce", "all_gather",
+                    "all_gather_replicated", "reduce_scatter", "all_to_all",
+                    "send_recv", "ring_shift", "grad_sum_reduce",
+                    "halo_exchange", "halo_accumulate",
+                    "halo_exchange_unbalanced"}
+DEPRECATED = {"dist_affine", "dist_conv_same", "dist_conv1d_causal",
+              "dist_pool", "dist_embedding"}
+PRAGMA = "repro-lint: allow"
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint violation: file, line, rule id, message."""
+
+    path: str
+    lineno: int
+    rule: str
+    message: str
+
+
+def _call_name(node: ast.Call) -> str:
+    """Trailing name of a call target: ``lax.psum`` -> ``psum``."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _allowed(source_lines, lineno: int) -> bool:
+    return (0 < lineno <= len(source_lines)
+            and PRAGMA in source_lines[lineno - 1])
+
+
+# ---------------------------------------------------------------------------
+# R1 / R2: the LinearOp subclass registry.
+# ---------------------------------------------------------------------------
+
+def _class_graph(trees) -> dict:
+    """{class name: (path, node, base names)} over all parsed modules."""
+    out = {}
+    for path, tree in trees.items():
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                bases = []
+                for b in node.bases:
+                    if isinstance(b, ast.Name):
+                        bases.append(b.id)
+                    elif isinstance(b, ast.Attribute):
+                        bases.append(b.attr)
+                out[node.name] = (path, node, bases)
+    return out
+
+
+def _linop_descendants(classes: dict) -> list:
+    """Transitive subclasses of LinearOp (excluding the root), by name."""
+    known = {"LinearOp"}
+    changed = True
+    while changed:
+        changed = False
+        for name, (_, _, bases) in classes.items():
+            if name not in known and any(b in known for b in bases):
+                known.add(name)
+                changed = True
+    return sorted(known - {"LinearOp"})
+
+
+def _registry_texts() -> tuple:
+    eq13 = "\n".join((ROOT / p).read_text()
+                     for p in EQ13_REGISTRIES if (ROOT / p).exists())
+    space_path = ROOT / SPACE_REGISTRY
+    space = space_path.read_text() if space_path.exists() else ""
+    return eq13, space
+
+
+def check_linop_registry(trees) -> list:
+    """R1 + R2 over every ``LinearOp`` subclass found under src/repro."""
+    classes = _class_graph({p: t for p, t in trees.items()
+                            if p.startswith("src/repro/")})
+    eq13, space = _registry_texts()
+    findings = []
+    for name in _linop_descendants(classes):
+        path, node, _ = classes[name]
+        own = {n.name for n in node.body if isinstance(n, ast.FunctionDef)}
+        if "_adjoint" not in own:
+            findings.append(Finding(
+                path, node.lineno, "adjoint-not-registered",
+                f"LinearOp subclass {name} does not define _adjoint in its "
+                f"own body — an inherited adjoint returns the parent type "
+                f"and breaks .T involution"))
+        word = re.compile(rf"\b{re.escape(name)}\b")
+        if not word.search(eq13):
+            findings.append(Finding(
+                path, node.lineno, "op-not-in-registry",
+                f"LinearOp subclass {name} is absent from the Eq. 13 "
+                f"registries ({', '.join(EQ13_REGISTRIES)})"))
+        if not word.search(space):
+            findings.append(Finding(
+                path, node.lineno, "op-not-in-registry",
+                f"LinearOp subclass {name} is absent from the shared space "
+                f"registry ({SPACE_REGISTRY}) the fuzzer samples"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R3: bare shard_map.
+# ---------------------------------------------------------------------------
+
+def check_bare_shard_map(path, tree, lines) -> list:
+    """R3: flag shard_map calls outside the three allowed homes."""
+    if path in SHARD_MAP_ALLOWED:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and _call_name(node) == "shard_map"
+                and not _allowed(lines, node.lineno)):
+            out.append(Finding(
+                path, node.lineno, "bare-shard-map",
+                "shard_map outside core/compile.py|core/primitives.py|"
+                "compat.py — open regions via dist_jit / prim.smap"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R4: collectives under a divergent Python if.
+# ---------------------------------------------------------------------------
+
+def _names_in(node) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _has_axis_index(node) -> bool:
+    return any(isinstance(n, ast.Call) and _call_name(n) == "axis_index"
+               for n in ast.walk(node))
+
+
+def _collectives_in(node) -> list:
+    return [n for n in ast.walk(node)
+            if isinstance(n, ast.Call)
+            and _call_name(n) in (LAX_COLLECTIVES | PRIM_COLLECTIVES)]
+
+
+def check_divergent_collectives(path, tree, lines) -> list:
+    """R4: taint names assigned from ``axis_index`` and flag collective
+    calls inside an ``if`` whose test reads a tainted name (or calls
+    axis_index directly).  Static Python ints stay untainted, so the
+    unrolled ring-hop ``if t < cp - 1`` idiom does not fire."""
+    out = []
+
+    def walk_fn(fn):
+        tainted: set = set()
+
+        def expr_tainted(e) -> bool:
+            return _has_axis_index(e) or bool(_names_in(e) & tainted)
+
+        def visit(stmts):
+            for st in stmts:
+                if isinstance(st, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    value = st.value
+                    if value is not None and expr_tainted(value):
+                        targets = (st.targets
+                                   if isinstance(st, ast.Assign)
+                                   else [st.target])
+                        for t in targets:
+                            tainted.update(_names_in(t))
+                elif isinstance(st, ast.If):
+                    if expr_tainted(st.test):
+                        for call in _collectives_in(st):
+                            if not _allowed(lines, call.lineno):
+                                out.append(Finding(
+                                    path, call.lineno,
+                                    "divergent-collective",
+                                    f"collective {_call_name(call)} under "
+                                    f"an if on an axis_index-derived value "
+                                    f"— divergent workers deadlock; "
+                                    f"predicate with jnp.where"))
+                    else:
+                        visit(st.body)
+                        visit(st.orelse)
+                elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue  # its own scope: the outer walk visits it
+                else:
+                    for _, value in ast.iter_fields(st):
+                        if isinstance(value, list) and value:
+                            if isinstance(value[0], ast.stmt):
+                                visit(value)
+                            elif isinstance(value[0], ast.excepthandler):
+                                for h in value:
+                                    visit(h.body)
+
+        visit(fn.body)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            walk_fn(node)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R5: deprecated per-layer dist_* call sites.
+# ---------------------------------------------------------------------------
+
+def check_deprecated_calls(path, tree, lines) -> list:
+    """R5: calls to the deprecated dist_* shims outside core/layers.py
+    (tests exercising the shims on purpose are out of scope)."""
+    if path == DEPRECATED_HOME or path.startswith("tests/"):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and _call_name(node) in DEPRECATED
+                and not _allowed(lines, node.lineno)):
+            out.append(Finding(
+                path, node.lineno, "deprecated-dist-call",
+                f"deprecated per-layer shim {_call_name(node)}() — use the "
+                f"context-aware layer API under dist_jit"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Driver.
+# ---------------------------------------------------------------------------
+
+def lint_sources(sources: dict) -> list:
+    """Run every rule over ``{repo-relative path: source text}``."""
+    trees, lines = {}, {}
+    findings = []
+    for path, src in sources.items():
+        try:
+            trees[path] = ast.parse(src)
+        except SyntaxError as e:
+            findings.append(Finding(path, e.lineno or 0, "syntax-error",
+                                    str(e)))
+            continue
+        lines[path] = src.splitlines()
+    findings += check_linop_registry(trees)
+    for path, tree in trees.items():
+        findings += check_bare_shard_map(path, tree, lines[path])
+        findings += check_divergent_collectives(path, tree, lines[path])
+        if (path.startswith(("src/", "benchmarks/", "examples/"))
+                and path != DEPRECATED_HOME):
+            findings += check_deprecated_calls(path, tree, lines[path])
+    findings.sort(key=lambda f: (f.path, f.lineno))
+    return findings
+
+
+def repo_sources() -> dict:
+    """Every tracked .py file under the scanned directories."""
+    out = {}
+    for d in SCAN_DIRS:
+        base = ROOT / d
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            out[p.relative_to(ROOT).as_posix()] = p.read_text()
+    return out
+
+
+_SELF_TEST = {
+    # R4: collective under an if on an axis_index-derived value.
+    "src/repro/_selftest_divergent.py": (
+        "divergent-collective",
+        "from jax import lax\n"
+        "def f(x):\n"
+        "    i = lax.axis_index('tp')\n"
+        "    phase = i % 2\n"
+        "    if phase == 0:\n"
+        "        x = lax.psum(x, 'tp')\n"
+        "    return x\n"),
+    # R1 + R2: a LinearOp subclass with no adjoint and no registry entry.
+    "src/repro/_selftest_rogue.py": (
+        "adjoint-not-registered",
+        "from repro.core.linop import LinearOp\n"
+        "class RogueOp(LinearOp):\n"
+        "    def __call__(self, x):\n"
+        "        return x\n"),
+    # R3: a bare shard_map outside the allowed homes.
+    "src/repro/_selftest_shardmap.py": (
+        "bare-shard-map",
+        "from jax.experimental.shard_map import shard_map\n"
+        "def g(f, mesh):\n"
+        "    return shard_map(f, mesh=mesh, in_specs=(), out_specs=())\n"),
+    # R5: a deprecated per-layer shim call site.
+    "src/repro/_selftest_deprecated.py": (
+        "deprecated-dist-call",
+        "from repro.core import layers as L\n"
+        "def h(x, p, mesh):\n"
+        "    return L.dist_affine(x, p, mesh)\n"),
+}
+
+
+def self_test() -> int:
+    """Inject one synthetic violation per rule; assert each is caught AND
+    that the clean repo stays clean."""
+    base = repo_sources()
+    clean = lint_sources(base)
+    if clean:
+        print("FAIL: repo is not clean before injection:")
+        for f in clean:
+            print(f"  {f.path}:{f.lineno} {f.rule} {f.message}")
+        return 1
+    failures = 0
+    for path, (rule, src) in _SELF_TEST.items():
+        found = lint_sources({**base, path: src})
+        hit = [f for f in found if f.path == path and f.rule == rule]
+        status = "ok  " if hit else "FAIL"
+        if not hit:
+            failures += 1
+        print(f"{status} injected {rule} in {path}: "
+              f"{len(hit)} finding(s)")
+    # The rogue op must ALSO trip the registry rule.
+    rogue = lint_sources({**base,
+                          "src/repro/_selftest_rogue.py":
+                          _SELF_TEST["src/repro/_selftest_rogue.py"][1]})
+    if not any(f.rule == "op-not-in-registry" for f in rogue):
+        print("FAIL: unregistered LinearOp subclass not caught")
+        failures += 1
+    else:
+        print("ok   injected op-not-in-registry in _selftest_rogue.py")
+    print("lint_repro --self-test:", "FAIL" if failures else "PASS")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    """CLI entry point; exit 1 on any finding."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON")
+    ap.add_argument("--self-test", action="store_true",
+                    help="inject one violation per rule; assert caught")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return self_test()
+    findings = lint_sources(repo_sources())
+    if args.json:
+        print(json.dumps([asdict(f) for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f"{f.path}:{f.lineno}: [{f.rule}] {f.message}")
+        print(f"lint_repro: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

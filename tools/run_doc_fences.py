@@ -1,10 +1,10 @@
 """Execute fenced ``python`` code blocks from markdown docs.
 
 CI's docs job runs this over README.md / DESIGN.md so the documented
-snippets can never drift from the code: every \`\`\`python fence is executed
+snippets can never drift from the code: every ```python fence is executed
 top-to-bottom in a namespace SHARED per file (later fences may use names
 from earlier ones), and any exception fails the build.  Non-python fences
-(\`\`\`text, \`\`\`bash, ...) are ignored.
+(```text, ```bash, ...) are ignored.
 
 Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -21,7 +21,7 @@ FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
 
 
 def extract(path: str) -> list[tuple[int, str]]:
-    """(starting line number, source) for every \`\`\`python fence."""
+    """(starting line number, source) for every ```python fence."""
     text = open(path).read()
     blocks = []
     for m in FENCE.finditer(text):
