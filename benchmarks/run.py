@@ -15,17 +15,22 @@
                    KV-ring CP — us/step per mesh factorization, compiled
                    seq-all-gather / peak-activation evidence, and the
                    budget-refusal demo (refused at cp=1, trains at cp=4)
+  moe_ep           expert parallelism (DESIGN §8): local dispatch vs the
+                   (dp, ep) AllToAll dispatch — us/step, fp32 loss
+                   equality at drop-free capacity, and expert-imbalance
+                   stats (per-expert token counts, drop fraction) at the
+                   production capacity factor
   train_micro      end-to-end small-LM train-step timing (us/step)
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
 writes the machine-readable perf artifact (per-row us + structured extras
 + mesh factorization + device kind) the CI multidevice job uploads as
-BENCH_6.json — the gateable perf trajectory; ``--lint`` additionally runs
+BENCH_7.json — the gateable perf trajectory; ``--lint`` additionally runs
 ``repro.analysis.hlo_lint`` over the compiled programs and attaches the
 structured findings to the rows (an error-severity finding in a CP program
 fails the bench).  Run:
   PYTHONPATH=src python -m benchmarks.run [--only adjoint_table,...] \
-      [--json BENCH_6.json] [--lint]
+      [--json BENCH_7.json] [--lint]
 (uses 8 host devices; sets XLA_FLAGS when unset)
 """
 
@@ -563,6 +568,88 @@ def bench_ring_attention():
          loss=float(m4["loss"]))
 
 
+def bench_moe_ep():
+    """Expert parallelism (DESIGN §8): the perf + balance evidence for PR 7.
+
+    Times the hybrid MoE train step with local dispatch (dp=2, experts
+    replicated) against the (dp, ep) = (2, 4) factorization where dispatch
+    is the AllToAll adjoint pair over the dedicated ep axis.  Both run at
+    DROP-FREE capacity (capacity_factor == num_experts) and are asserted
+    fp32-equal in first-step loss — the mesh changes the movement plan,
+    not the mathematics.  The ep row additionally carries the expert-
+    imbalance statistics at the production capacity factor (1.25): global
+    per-expert token counts, the max/mean imbalance ratio, and the
+    fraction of routed tokens dropped by the per-rank capacity restriction
+    — the quantities a capacity-factor sweep would gate on.
+    """
+    import math
+
+    from repro.configs import ModelConfig
+    from repro.launch.mesh import make_hybrid_mesh
+    from repro.models import init_pipeline_params
+    from repro.models.moe import moe_init
+    from repro.optim import make_optimizer
+    from repro.sharding import Policy
+    from repro.train import build_hybrid_train_step, init_train_state
+
+    cfg = ModelConfig(name="moe_micro", family="moe", num_layers=2,
+                      d_model=128, num_heads=8, num_kv_heads=4, head_dim=16,
+                      d_ff=256, vocab_size=1024, dtype="float32", remat=False,
+                      attn_chunk=64, num_experts=4, experts_per_token=2,
+                      moe_d_ff=192, moe_layer_period=2, moe_offset=1,
+                      num_shared_experts=1, capacity_factor=4.0)
+    M, B, S, ep = 2, 16, 64, 4
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.fold_in(key, 1),
+                                          (B, S), 0, cfg.vocab_size)}
+    opt = make_optimizer("adamw", total_steps=100)
+
+    # expert-imbalance probe at the production capacity factor: replicate
+    # the router + per-rank capacity math of models/moe.py on one token
+    # batch (T tokens split into ep blocks, exactly the executor's batch
+    # sub-sharding) — host-side, no collective in the way.
+    E, k, cf = cfg.num_experts, cfg.experts_per_token, 1.25
+    moe_p = moe_init(jax.random.PRNGKey(2), cfg, jnp.float32)
+    xtok = jax.random.normal(jax.random.PRNGKey(3), (B * S, cfg.d_model))
+    probs = jax.nn.softmax(xtok @ moe_p["router"], axis=-1)
+    _, gate_idx = jax.lax.top_k(probs, k)
+    idx = np.asarray(gate_idx).reshape(ep, -1)          # per-rank blocks
+    cap = int(math.ceil(idx.shape[1] / E * cf))
+    counts = np.zeros(E, np.int64)
+    dropped = 0
+    for blk in idx:
+        c = np.bincount(blk.reshape(-1), minlength=E)
+        counts += c
+        dropped += int(np.maximum(c - cap, 0).sum())
+    drop_frac = dropped / idx.size
+    imbalance = float(counts.max() / counts.mean())
+
+    losses = {}
+    for tag, mesh, extras in (
+            ("local_dp2", make_hybrid_mesh(2, 1), {}),
+            ("dp2_ep4", make_hybrid_mesh(2, 1, ep=ep),
+             dict(expert_token_counts=[int(c) for c in counts],
+                  imbalance_max_over_mean=imbalance,
+                  drop_fraction_at_cf1_25=drop_frac, capacity_factor=cf))):
+        pol = Policy.for_mesh(mesh)
+        step = jax.jit(build_hybrid_train_step(cfg, pol, opt,
+                                               num_microbatches=M))
+        params = init_pipeline_params(cfg, jax.random.PRNGKey(1),
+                                      pol.pipe_size)
+        state = init_train_state(cfg, params, opt)
+        _, m = step(state, batch)              # compile
+        losses[tag] = float(m["loss"])
+        us = timeit(lambda: step(state, batch)[1]["loss"], iters=5, warmup=1)
+        derived = f"loss={losses[tag]:.4f}"
+        if extras:
+            derived += (f";imbalance={imbalance:.2f}"
+                        f";drop_frac@cf{cf}={drop_frac:.3f}")
+        emit(f"moe_ep/{tag}", us, derived, mesh=tag, loss=losses[tag],
+             **extras)
+    assert abs(losses["local_dp2"] - losses["dp2_ep4"]) < 1e-4, losses
+
+
 def bench_train_micro():
     from repro.configs import ModelConfig
     from repro.data import DataConfig, SyntheticLM
@@ -602,6 +689,7 @@ BENCHES = {
     "pipeline_schedules": bench_pipeline_schedules,
     "hybrid_3d": bench_hybrid_3d,
     "ring_attention": bench_ring_attention,
+    "moe_ep": bench_moe_ep,
     "train_micro": bench_train_micro,
 }
 
@@ -611,7 +699,7 @@ def main():
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the machine-readable perf artifact "
-                         "(BENCH_6.json in CI)")
+                         "(BENCH_7.json in CI)")
     ap.add_argument("--lint", action="store_true",
                     help="run repro.analysis.hlo_lint over the compiled "
                          "programs and attach findings to the json rows "

@@ -60,6 +60,7 @@ TYPED_OPS = (
     linop.KVRingShift,
     linop.BatchScatter,
     linop.GradSumReduce,
+    linop.CapacityRestrict,
     linop.HaloExchange,
     linop.HaloAccumulate,
     linop.Compose,
@@ -163,10 +164,23 @@ def candidate_moves(space: Space) -> list:
     """Every move the chain generator could CONSIDER in ``space`` (before
     legality filtering): ``(kind, arg)`` pairs, hashable and deterministic."""
     rank = len(space.local_shape)
+    # CapacityRestrict (the MoE capacity truncation, DESIGN §8) typechecks
+    # in EVERY space — it is worker-local and kind-agnostic — but its
+    # CANONICAL boundary specs (in_spec/out_spec) are replicated, and the
+    # fuzzer lifts each sampled chain through its boundary ops' canonical
+    # specs.  So the generator only OFFERS it in replicated space; stacked
+    # mid-chain placements are covered by the exported composites below and
+    # the hand-built chains in tests/md/test_linop.py.
+    cap = []
+    for cd, n in enumerate(space.local_shape):
+        if n >= 2:
+            cap += [("cap_restrict", (cd, kp))
+                    for kp in sorted({n - 1, (n + 1) // 2})]
+        cap += [("cap_embed", (cd, t)) for t in sorted({n + 1, 2 * n})]
     if space.kind == "replicated":
         mv = [("identity", None), ("broadcast", None)]
         mv += [("batch_scatter", d) for d in range(rank)]
-        return mv
+        return mv + cap
     d = space.dim
     mv = []
     if d == 0:
@@ -211,6 +225,13 @@ def move_op(axis: str, space: Space, move) -> LinearOp:
         return linop.HaloExchange(axis, d, *arg)
     if kind == "halo_acc":
         return linop.HaloAccumulate(axis, d, *arg)
+    if kind == "cap_restrict":
+        cd, keep = arg
+        return linop.CapacityRestrict(cd, keep, space.local_shape[cd])
+    if kind == "cap_embed":
+        cd, total = arg
+        return linop.CapacityRestrict(cd, space.local_shape[cd], total,
+                                      embed=True)
     raise AssertionError(f"unknown move kind {kind!r}")
 
 
@@ -247,7 +268,7 @@ def exported_composites() -> list:
     """(name, op, axis_sizes, in_space) for the repo's canonical composite
     programs — the chains the docs/tests export (mirrors
     tests/md/test_linop.py COMPOSITES plus the pipeline boundary)."""
-    AX, sz = "model", {"model": 8, "data": 8, "ctx": 4, "pipe": 4}
+    AX, sz = "model", {"model": 8, "data": 8, "ctx": 4, "pipe": 4, "ep": 2}
     St, Re = Space.stacked, Space.replicated
     return [
         ("issue_chain",
@@ -273,6 +294,10 @@ def exported_composites() -> list:
         ("alltoall_swap",
          linop.AllToAll(AX, 0, 1).T @ linop.AllToAll(AX, 0, 1),
          sz, St(AX, 1, (8, 8))),
+        ("moe_dispatch_combine",
+         linop.AllToAll("ep", 0, 1).T @ linop.AllToAll("ep", 0, 1)
+         @ linop.CapacityRestrict(0, 8, 9),
+         sz, St("ep", 1, (9, 4))),
         ("pipe_boundary",
          pipeline.StageBoundary("pipe", -1) @ pipeline.StageBoundary("pipe", 1),
          sz, St("pipe", 0, (4, 3))),
@@ -293,7 +318,7 @@ def _expect_reject(name, build, mesh, in_space=None):
 
 def main() -> int:
     """Typecheck every exported composite; reject the known-negative set."""
-    sz = {"model": 8, "data": 8, "ctx": 4, "pipe": 4}
+    sz = {"model": 8, "data": 8, "ctx": 4, "pipe": 4, "ep": 2}
     for name, op, sizes, space in exported_composites():
         trace = typecheck(op, sizes, space)
         print(f"ok   {name}: {trace.in_space.describe()} |- "
@@ -317,6 +342,14 @@ def main() -> int:
         ("wrong_axis_stacking",
          lambda: linop.AllReduce("model"),
          sz, Space.stacked("ctx", 0, (4, 3))),
+        ("cap_restrict_after_combine",
+         # combine hands back E*cap kept slots; restricting as if the
+         # dropped tail were still present is the classic off-by-capacity
+         lambda: linop.CapacityRestrict(0, 8, 9) @ linop.AllToAll("ep", 1, 0),
+         sz, Space.stacked("ep", 0, (4, 8))),
+        ("cap_keep_out_of_range",
+         lambda: linop.CapacityRestrict(0, 7, 6),
+         sz, None),
     ]
     for name, build, sizes, space in negatives:
         diag = _expect_reject(name, build, sizes, space)

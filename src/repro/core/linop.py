@@ -77,6 +77,7 @@ __all__ = [
     "KVRingShift",
     "BatchScatter",
     "GradSumReduce",
+    "CapacityRestrict",
     "HaloExchange",
     "HaloAccumulate",
     "Compose",
@@ -692,6 +693,74 @@ class GradSumReduce(LinearOp):
 
     def in_spec(self, rank):
         return _axis_at(self.axis, self.dim, rank)
+
+    def out_spec(self, rank):
+        return P()
+
+
+@dataclass(frozen=True)
+class CapacityRestrict(LinearOp):
+    """P_cap: restriction onto the first ``keep`` of ``total`` slots.
+
+    The capacity-factor truncation of MoE dispatch (DESIGN §8) as a
+    first-class operator instead of a silent mask: the forward DROPS the
+    trailing ``total - keep`` entries along tensor ``dim`` (over-capacity
+    slots), a restriction map F^total -> F^keep on that dim.  Its adjoint
+    is the zero-padded embedding F^keep -> F^total (``embed=True``): kept
+    slots return to their positions, dropped slots receive EXACTLY zero
+    cotangent — the adjoint of a restriction is the inclusion, so dropped
+    tokens vanish from the gradient by construction rather than by mask.
+
+    Worker-local (no mesh axis): it composes junction-neutrally with the
+    collectives and acts on replicated and stacked spaces alike, mapping
+    the ``dim`` extent ``total -> keep`` (or ``keep -> total`` embedding).
+
+    >>> CapacityRestrict(0, 6, 9).T == CapacityRestrict(0, 6, 9, embed=True)
+    True
+    >>> CapacityRestrict(0, 6, 9).T.T == CapacityRestrict(0, 6, 9)
+    True
+    """
+
+    dim: int
+    keep: int
+    total: int
+    embed: bool = False
+
+    def __post_init__(self):
+        if not 0 < self.keep <= self.total:
+            raise SpaceTypeError(
+                f"CapacityRestrict keeps {self.keep} of {self.total} slots — "
+                f"need 0 < keep <= total")
+
+    def __call__(self, x):
+        if self.embed:
+            pad = [(0, 0)] * x.ndim
+            pad[self.dim] = (0, self.total - self.keep)
+            return jnp.pad(x, pad)
+        return jax.lax.slice_in_dim(x, 0, self.keep, axis=self.dim)
+
+    def _adjoint(self):
+        return CapacityRestrict(self.dim, self.keep, self.total,
+                                not self.embed)
+
+    def space_map(self, space, axis_sizes):
+        """``dim`` extent ``total -> keep`` (restriction) or ``keep ->
+        total`` (zero-padded embedding), on replicated or stacked spaces
+        alike (worker-local: the stacking axis is untouched)."""
+        _expect_dim(self, space, self.dim)
+        want = self.keep if self.embed else self.total
+        if space.local_shape[self.dim] != want:
+            raise SpaceTypeError(
+                f"{self!r} consumes extent {want} along dim {self.dim}, got "
+                f"{space.describe()}")
+        shape = list(space.local_shape)
+        shape[self.dim] = self.total if self.embed else self.keep
+        if space.kind == "replicated":
+            return Space.replicated(shape)
+        return Space.stacked(space.axis, space.dim, shape)
+
+    def in_spec(self, rank):
+        return P()
 
     def out_spec(self, rank):
         return P()

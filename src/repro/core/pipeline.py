@@ -267,7 +267,8 @@ def _masked_add(acc, contrib, mask):
 
 def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
                             params_parts, x_parts, y_parts,
-                            pre_psum_axes=(), post_psum_axes=(), jit=True):
+                            pre_psum_axes=(), post_psum_axes=(),
+                            stage_psum_axes=None, stage_aux=False, jit=True):
     """Build ``f(params, xs, ys) -> (loss, grads)`` for a scheduled pipeline.
 
     The returned function runs the whole schedule inside ONE shard_map over
@@ -282,7 +283,9 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
       stage_fn: ``(stage_params, act) -> act`` — the homogeneous stage body,
                 applied by every pipe rank to its own stage's parameters;
                 must preserve the activation's shape/dtype.  May use the
-                context-aware TP layer API (the model axis is live).
+                context-aware TP layer API (the model axis is live).  With
+                ``stage_aux=True`` it returns ``(act, aux)`` instead — see
+                below.
       post_fn:  ``(params['post'], act, microbatch_y) -> scalar loss`` — the
                 last-stage-only epilogue (final norm, head, loss).
       policy:   ``sharding.Policy`` with ``pipe_axis`` set; supplies the
@@ -308,6 +311,23 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
                 cotangents are CONTRIBUTIONS to be summed (DESIGN §2.1) —
                 e.g. the model axis when ``pre_fn`` ends in a feature
                 shard-slice.  Leave empty for replicated cotangents.
+      stage_psum_axes: optional ``callable(path) -> axes`` overriding, per
+                stage-param leaf, the mesh axes its gradient is psummed
+                over (default: data + ctx + ep).  Expert-parallel weight
+                shards (DESIGN §8) exclude the ep axis: the combine
+                AllToAll already returned their full token cotangents, so
+                each ep rank's shard gradient is complete — psumming it
+                would add gradients of DIFFERENT expert blocks.
+      stage_aux: when True, ``stage_fn`` returns ``(act, aux)`` with
+                ``aux`` a float scalar side loss (e.g. the MoE
+                load-balance term, models/moe.py).  Each stage adds its
+                own aux to the loss on its backward tick — the aux
+                cotangent is seeded at 1 through the SAME rematerialized
+                vjp, so d(aux)/d(params, act) joins the scheduled adjoint
+                flow with no extra pass.  ``aux`` must be the
+                data/ctx/ep-global statistic (identical across those
+                ranks): the epilogue's psum x 1/(dp*cp*ep) then counts it
+                exactly once per (stage, microbatch).
       jit: wrap in jax.jit (as dist_jit).
 
     Returns:
@@ -344,6 +364,15 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
     ctx_axis = policy.active_ctx_axis
     cx_axes = (ctx_axis,) if ctx_axis else ()
     cp = policy.axis_size(ctx_axis) if ctx_axis else 1
+    # Expert parallelism (DESIGN §8) nests inside DP along the BATCH dim:
+    # every ep rank drives the same schedule on its own batch sub-shard
+    # (``Partitioned(None, ("data", "ep"), "ctx")`` microbatches) and MoE
+    # sublayers inside stage bodies dispatch over the ep axis (AllToAll);
+    # ep joins every drain-tail reduction except the expert-shard leaves
+    # (``stage_psum_axes``).  ep=1 degenerates identically.
+    ep_axis = policy.active_ep_axis
+    ep_axes = (ep_axis,) if ep_axis else ()
+    ep = policy.axis_size(ep_axis) if ep_axis else 1
     boundary = StageBoundary(pipe_axis)          # forward send
     boundary_T = boundary.T                      # adjoint: backward send
 
@@ -366,7 +395,8 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
                                                        keepdims=False), tree)
 
         x0_sds = jax.eval_shape(pre_fn, p_pre, mb_slice(xs, 0))
-        act_sds = jax.eval_shape(stage_fn, p_stage, x0_sds)
+        out_sds = jax.eval_shape(stage_fn, p_stage, x0_sds)
+        act_sds = out_sds[0] if stage_aux else out_sds
         if (act_sds.shape, act_sds.dtype) != (x0_sds.shape, x0_sds.dtype):
             raise ValueError(
                 f"stage body must preserve the activation: in "
@@ -401,18 +431,32 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
             x0, vjp_pre = jax.vjp(lambda pp: pre_fn(pp, mb_x), p_pre)
             fbuf = c["fbuf"]
             x_in = jnp.where(s == 0, x0, fbuf[slot_f])
-            y, vjp = jax.vjp(stage_fn, p_stage, x_in)
+            if stage_aux:
+                (y, aux_m), vjp = jax.vjp(stage_fn, p_stage, x_in)
+            else:
+                y, vjp = jax.vjp(stage_fn, p_stage, x_in)
             loss_m, (g_post_m, gy_post) = jax.value_and_grad(
                 post_fn, argnums=(0, 1))(p_post, y, mb_y)
             gy = jnp.where(s == S - 1, gy_post.astype(x0_sds.dtype),
                            c["bbuf"][slot_b])
-            g_stage_m, gx = vjp(gy)
+            if stage_aux:
+                # Seed this stage's aux cotangent at 1 alongside the
+                # activation cotangent: the rematerialized vjp then carries
+                # d(aux)/d(params) into g_stage_m and d(aux)/d(x_in) into
+                # gx, both masked to backward ticks below.
+                g_stage_m, gx = vjp((gy, jnp.ones((), aux_m.dtype)))
+            else:
+                g_stage_m, gx = vjp(gy)
 
             last_b = is_b & (s == S - 1)
             first_b = is_b & (s == 0)
             g_stage = _masked_add(c["g_stage"], g_stage_m, is_b)
             g_post = _masked_add(c["g_post"], g_post_m, last_b)
             loss = c["loss"] + jnp.where(last_b, loss_m, 0.0)
+            if stage_aux:
+                # each stage contributes its own aux once per microbatch
+                # (on its B tick); the epilogue's pipe psum collects them.
+                loss = loss + jnp.where(is_b, aux_m, 0.0)
             g_pre = _masked_add(c["g_pre"], vjp_pre(gx)[0], first_b)
 
             # ---- boundary crossings (uniform every tick): activations ride
@@ -428,22 +472,30 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
 
         carry, _ = jax.lax.scan(tick, carry, (ops, mbs, recv_f, recv_b))
 
-        inv_m = 1.0 / (M * dp * cp)
+        inv_m = 1.0 / (M * dp * cp * ep)
         psum_tree = lambda tree, axes: jax.tree_util.tree_map(
             lambda g: jax.lax.psum(g, axes), tree)
         # Only the owning stage accumulated pre/post/loss; collect over pipe
         # (plus any contribution-form model axes — DESIGN §2.1).  With a
-        # data and/or ctx axis every reduction ALSO sums the per-replica /
-        # per-sequence-shard contributions — the DP gradient sum-reduce
-        # (Broadcast* = SumReduce, Eq. 9) and its ctx sibling (DESIGN §6),
+        # data, ctx and/or ep axis every reduction ALSO sums the
+        # per-replica / per-sequence-shard / per-batch-sub-shard
+        # contributions — the DP gradient sum-reduce (Broadcast* =
+        # SumReduce, Eq. 9) and its ctx/ep siblings (DESIGN §6, §8),
         # placed at the tail of the drain inside this same region.
-        rep_axes = dp_axes + cx_axes
+        rep_axes = dp_axes + cx_axes + ep_axes
         g_pre = psum_tree(carry["g_pre"],
                           (pipe_axis,) + rep_axes + tuple(pre_psum_axes))
         g_post = psum_tree(carry["g_post"],
                            (pipe_axis,) + rep_axes + tuple(post_psum_axes))
-        g_stage = (psum_tree(carry["g_stage"], rep_axes) if rep_axes
-                   else carry["g_stage"])
+        if stage_psum_axes is not None:
+            def _psum_leaf(path, g):
+                axes = tuple(stage_psum_axes(path))
+                return jax.lax.psum(g, axes) if axes else g
+            g_stage = jax.tree_util.tree_map_with_path(_psum_leaf,
+                                                       carry["g_stage"])
+        else:
+            g_stage = (psum_tree(carry["g_stage"], rep_axes) if rep_axes
+                       else carry["g_stage"])
         loss = jax.lax.psum(carry["loss"], (pipe_axis,) + rep_axes) * inv_m
         scale = partial(jax.tree_util.tree_map, lambda g: g * inv_m)
         grads = {

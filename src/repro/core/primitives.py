@@ -39,6 +39,7 @@ __all__ = [
     "all_reduce",
     "all_gather",
     "all_gather_replicated",
+    "shard_slice_replicated",
     "reduce_scatter",
     "all_to_all",
     "send_recv",
@@ -192,6 +193,36 @@ def _agr_bwd(axis_name, dim, _, g):
 
 
 all_gather_replicated.defvjp(_agr_fwd, _agr_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def shard_slice_replicated(x: jax.Array, axis_name, dim: int) -> jax.Array:
+    """Restriction of a REPLICATED value to the worker's own block.
+
+    The inverse (and adjoint, under the replicated-cotangent convention)
+    of ``all_gather_replicated``: forward slices worker i's block out of a
+    value that is identical on every worker; backward rebuilds the full,
+    replicated cotangent by tiling the per-block cotangents with an
+    all-gather.  Used where replicated compute hands a block back to a
+    sharded consumer (e.g. re-sharding an MoE sublayer's replicated output
+    across the tensor axis, DESIGN §8) — a ``psum_scatter`` there would
+    multiply-count the k identical copies (DESIGN §2.1).
+    """
+    k = compat.axis_size(axis_name)
+    n = x.shape[dim] // k
+    i = jax.lax.axis_index(axis_name)
+    return jax.lax.dynamic_slice_in_dim(x, i * n, n, axis=dim)
+
+
+def _ssr_fwd(x, axis_name, dim):
+    return shard_slice_replicated(x, axis_name, dim), None
+
+
+def _ssr_bwd(axis_name, dim, _, g):
+    return (jax.lax.all_gather(g, axis_name, axis=dim, tiled=True),)
+
+
+shard_slice_replicated.defvjp(_ssr_fwd, _ssr_bwd)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2))

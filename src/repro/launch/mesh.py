@@ -34,29 +34,34 @@ def make_pipeline_mesh(num_stages: int, tp: int = 1):
     return compat.make_mesh((num_stages, tp), ("pipe", "model"))
 
 
-def make_hybrid_mesh(dp: int, num_stages: int, cp: int = 1, tp: int = 1):
-    """Hybrid DP x pipe x ctx x tensor mesh (DESIGN §5-6): per-replica
-    batch shards move along ``data`` (BatchScatter / gradient sum-reduce),
-    stage boundaries along ``pipe``, KV ring-attention rotations along
-    ``ctx`` (KVRingShift, core/ring_attention.py), TP ring collectives
-    along ``model`` — all four of the paper's parallelism styles on ONE
-    mesh, so every (dp, S, cp, tp) factorization of the device count is a
-    scenario.  The axis names are fixed; ``Policy.for_mesh`` auto-binds
-    every axis by name.
+def make_hybrid_mesh(dp: int, num_stages: int, cp: int = 1, tp: int = 1,
+                     ep: int = 1):
+    """Hybrid DP x pipe x ctx x tensor x expert mesh (DESIGN §5-6, §8):
+    per-replica batch shards move along ``data`` (BatchScatter / gradient
+    sum-reduce), stage boundaries along ``pipe``, KV ring-attention
+    rotations along ``ctx`` (KVRingShift, core/ring_attention.py), TP ring
+    collectives along ``model``, MoE token dispatch along ``ep`` (AllToAll,
+    models/moe.py) — all five of the paper's parallelism styles on ONE
+    mesh, so every (dp, S, cp, tp, ep) factorization of the device count
+    is a scenario.  The axis names are fixed; ``Policy.for_mesh``
+    auto-binds every axis by name.
 
-    Degenerate factorizations reduce exactly: cp=1 returns the SAME 3-D
-    ``("data", "pipe", "model")`` mesh as before this axis existed (so the
-    cp=1 program is byte-identical to the 3-D hybrid path), dp=1 reduces
-    to the 2-D pipeline mesh's semantics, num_stages=1 to pure
-    DP x ctx x TP.
+    Degenerate factorizations reduce exactly: ep=1 returns the SAME 4-D
+    (or, at cp=1, 3-D) mesh as before this axis existed — so the ep=1
+    program is byte-identical to the PR 5 path; cp=1 likewise elides the
+    ctx axis; dp=1 reduces to the 2-D pipeline mesh's semantics,
+    num_stages=1 to pure DP x ctx x TP x EP.
 
     MIGRATION NOTE: the third positional parameter changed meaning in
     PR 5 (was ``tp``, now ``cp``).  Pre-existing 3-argument positional
     callers MUST move to ``make_hybrid_mesh(dp, S, tp=...)`` — a stale
     call still factors the device count and silently trains a different
     layout (ring attention, no TP).  Every in-repo caller is migrated."""
-    if cp == 1:
-        return compat.make_mesh((dp, num_stages, tp),
-                                ("data", "pipe", "model"))
-    return compat.make_mesh((dp, num_stages, cp, tp),
-                            ("data", "pipe", "ctx", "model"))
+    if ep == 1:
+        if cp == 1:
+            return compat.make_mesh((dp, num_stages, tp),
+                                    ("data", "pipe", "model"))
+        return compat.make_mesh((dp, num_stages, cp, tp),
+                                ("data", "pipe", "ctx", "model"))
+    return compat.make_mesh((dp, num_stages, cp, tp, ep),
+                            ("data", "pipe", "ctx", "model", "ep"))

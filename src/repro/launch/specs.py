@@ -110,20 +110,37 @@ def context_assignment(seq_len: int, cp: int) -> list[range]:
     return [range(c * s, (c + 1) * s) for c in range(cp)]
 
 
+def expert_assignment(num_experts: int, ep: int) -> list[range]:
+    """Per-ep-rank expert ranges under expert parallelism (DESIGN §8):
+    rank e owns the CONTIGUOUS experts ``[e*E/ep, (e+1)*E/ep)`` — the
+    blocks the dispatch AllToAll delivers each rank's token slots to.  A
+    planning/reporting helper mirroring ``context_assignment`` for the
+    ctx axis; enforces the same divisibility contract ``models/moe.py``
+    raises on at trace time."""
+    if num_experts % ep:
+        raise ValueError(
+            f"num_experts {num_experts} not divisible by ep={ep} — a "
+            f"clamped shard would silently drop the trailing experts")
+    e = num_experts // ep
+    return [range(r * e, (r + 1) * e) for r in range(ep)]
+
+
 def hybrid_input_specs(cfg: ModelConfig, shape_name: str,
                        num_microbatches: int, dp: int,
-                       cp: int = 1) -> tuple[dict, object]:
+                       cp: int = 1, ep: int = 1) -> tuple[dict, object]:
     """Microbatched (xs, labels) specs for the hybrid DP x pipe x ctx x
-    tensor executor: the SAME host-side (M, B/M, S) cut as the pipeline —
-    the per-replica restriction to (M, B/(M*dp), S/cp) happens at the
-    region boundary (``Partitioned(None, "data", "ctx")``), not in the
-    host arrays — plus the B % (M*dp) and S % cp divisibility checks the
-    train step enforces."""
+    tensor x expert executor: the SAME host-side (M, B/M, S) cut as the
+    pipeline — the per-replica restriction to (M, B/(M*dp*ep), S/cp)
+    happens at the region boundary (``Partitioned(None, ("data", "ep"),
+    "ctx")``), not in the host arrays — plus the B % (M*dp*ep), S % cp
+    and E % ep divisibility checks the train step enforces."""
     cell = SHAPES[shape_name]
     if cell.kind != "train":
         raise ValueError(f"hybrid specs need a train cell, got {cell.kind}")
-    replica_assignment(cell.global_batch, dp, num_microbatches)
+    replica_assignment(cell.global_batch, dp * ep, num_microbatches)
     context_assignment(cell.seq_len, cp)
+    if ep > 1:
+        expert_assignment(cfg.num_experts or 0, ep)
     return pipeline_input_specs(cfg, shape_name, num_microbatches)
 
 

@@ -3,10 +3,12 @@
     PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --reduced \
         --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
 
-Hybrid DP x pipe x ctx x tensor (DESIGN §5-6) — any (dp, pp, cp, tp)
-factorization of the visible devices; cp > 1 turns on ring-attention
-context parallelism (the sequence is sharded over the ctx axis and KV
-shards rotate, so no device ever holds the full sequence):
+Hybrid DP x pipe x ctx x tensor x expert (DESIGN §5-6, §8) — any
+(dp, pp, cp, tp, ep) factorization of the visible devices; cp > 1 turns on
+ring-attention context parallelism (the sequence is sharded over the ctx
+axis and KV shards rotate, so no device ever holds the full sequence);
+ep > 1 turns on expert parallelism for MoE archs (tokens dispatch to
+expert shards over the ep axis via AllToAll):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --reduced \
@@ -47,11 +49,13 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--hybrid-mesh", default=None, metavar="DP,PP,CP,TP",
+    ap.add_argument("--hybrid-mesh", default=None, metavar="DP,PP,CP,TP,EP",
                     help="run the hybrid executor on a (data, pipe, ctx, "
-                         "model) mesh with this factorization; CP is the "
-                         "ring-attention context-parallel degree (a 3-value "
-                         "DP,PP,TP form is accepted with CP=1)")
+                         "model, ep) mesh with this factorization; CP is "
+                         "the ring-attention context-parallel degree, EP "
+                         "the MoE expert-parallel degree (a 4-value "
+                         "DP,PP,CP,TP form is accepted with EP=1, a "
+                         "3-value DP,PP,TP form with CP=EP=1)")
     ap.add_argument("--microbatches", type=int, default=4,
                     help="pipeline microbatches per step (hybrid mesh only)")
     ap.add_argument("--schedule", default="1f1b",
@@ -71,19 +75,26 @@ def main():
         parts = [int(x) for x in args.hybrid_mesh.split(",")]
         if len(parts) == 3:          # legacy DP,PP,TP form
             parts = parts[:2] + [1] + parts[2:]
-        if len(parts) != 4:
-            raise SystemExit("--hybrid-mesh wants DP,PP,CP,TP (or DP,PP,TP)")
-        dp, pp, cp, tp = parts
-        if dp * pp * cp * tp != n_dev:
+        if len(parts) == 4:          # DP,PP,CP,TP form
+            parts = parts + [1]
+        if len(parts) != 5:
+            raise SystemExit("--hybrid-mesh wants DP,PP,CP,TP,EP "
+                             "(or DP,PP,CP,TP / DP,PP,TP)")
+        dp, pp, cp, tp, ep = parts
+        if dp * pp * cp * tp * ep != n_dev:
             raise SystemExit(
-                f"--hybrid-mesh {dp}x{pp}x{cp}x{tp} != {n_dev} devices")
+                f"--hybrid-mesh {dp}x{pp}x{cp}x{tp}x{ep} != {n_dev} devices")
         if args.seq % cp:
             raise SystemExit(f"--seq {args.seq} not divisible by CP={cp}")
+        if ep > 1 and (cfg.num_experts or 0) % ep:
+            raise SystemExit(f"--hybrid-mesh EP={ep} does not divide "
+                             f"num_experts={cfg.num_experts or 0} "
+                             f"for --arch {args.arch}")
         if args.use_flash:
             raise SystemExit("--use-flash is GSPMD-only: the pipeline/ctx "
                              "executor owns attention dispatch")
-        hybrid = (dp, pp, cp, tp)
-        mesh = make_hybrid_mesh(dp, pp, cp, tp)
+        hybrid = (dp, pp, cp, tp, ep)
+        mesh = make_hybrid_mesh(dp, pp, cp, tp, ep)
         policy = Policy.for_mesh(mesh, explicit_tp=tp > 1)
     else:
         mesh = make_host_mesh((n_dev, 1))

@@ -12,12 +12,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import layers as L
+from repro.core import primitives as prim
 from repro.core.compile import dist_jit
 from repro.sharding import Partitioned
 
 from .attention import attention_block, attention_block_tp, attn_init
 from .common import mlp_apply, mlp_init, rmsnorm, rmsnorm_sharded
-from .moe import moe_apply, moe_init
+from .moe import moe_apply, moe_init, moe_stage_body
 from .ssm import ssm_block, ssm_init
 
 
@@ -172,24 +173,68 @@ def pipeline_stage_body(p_stage, x, cfg, policy, *, positions):
     attention rings over the ctx axis in BOTH branches (the ctx, pipe and
     model axes all live in the one region).
 
+    MoE sublayers run through :func:`repro.models.moe.moe_stage_body`
+    (dispatch/combine as AllToAll adjoints on the live ep axis, DESIGN §8)
+    and the stage RETURNS ``(x, aux)`` — the summed load-balance auxiliary
+    loss rides the executor's ``stage_aux`` channel (core/pipeline.py)
+    instead of being dropped.  Dense configs keep the plain single-carry
+    scan, byte-identical to the pre-MoE path.  Under explicit_tp the MoE
+    half gathers the feature-sharded residual to the full width
+    (``all_gather_replicated``), runs the identical dispatch on every
+    model rank, and restricts the result back to the rank's own block
+    (``shard_slice_replicated`` — the replicated-cotangent adjoint pair).
+
     Training math only (no caches / flash kernel); each sublayer must be
-    TP-fusable under explicit_tp (attention mixer, dense/absent FFN).
+    TP-fusable under explicit_tp (attention mixer, dense/absent/moe FFN).
     """
     period = cfg.block_period
     explicit = policy is not None and getattr(policy, "explicit_tp", False)
     ctx_axis = policy.active_ctx_axis if policy is not None else None
+    ep_axis = policy.active_ep_axis if policy is not None else None
+    # Axes the stage's TOKENS shard over — the MoE aux statistics reduce
+    # over exactly these so aux is the global-microbatch value everywhere.
+    stat_axes = tuple(a for a in (
+        policy.active_data_axis if policy is not None else None,
+        ctx_axis, ep_axis) if a)
+    has_moe = any(layer_kinds(cfg, i)[1] == "moe" for i in range(period))
 
-    def one_superblock(xx, p_blk):
+    def apply_block(xx, p_blk):
+        aux = jnp.zeros((), jnp.float32)
         for i in range(period):
             mixer, ffn = layer_kinds(cfg, i)
-            if ffn == "moe":
-                # sublayer_apply's aux (load-balance) loss has no channel
-                # through the tick schedule; dropping it silently would
-                # diverge from build_train_step.
-                raise NotImplementedError(
-                    "MoE sublayers are not supported in pipeline stages")
             pp = p_blk[f"pos{i}"]
-            if explicit:
+            if ffn == "moe":
+                if explicit:
+                    if mixer != "attn":
+                        raise NotImplementedError(
+                            "explicit-TP pipeline stages support attention "
+                            f"mixers with MoE FFNs, got ({mixer}, {ffn})")
+                    ax = policy.model_axis
+                    xx = _tp_sublayer_body(pp, xx, positions, cfg, policy,
+                                           "none")
+                    h = rmsnorm_sharded(xx, pp["norm_ffn"], ax)
+                    h = prim.all_gather_replicated(h, ax, 2)
+                    y, aux_i = moe_stage_body(h, pp["moe"], cfg,
+                                              ep_axis=ep_axis,
+                                              stat_axes=stat_axes)
+                    xx = xx + prim.shard_slice_replicated(y, ax, 2)
+                else:
+                    h = rmsnorm(xx, pp["norm_mixer"])
+                    if mixer == "attn":
+                        out, _ = attention_block(
+                            pp["attn"], h, cfg, None, positions=positions,
+                            mode="train", ctx_axis=ctx_axis)
+                    else:
+                        out, _ = ssm_block(pp["ssm"], h, cfg, None,
+                                           mode="train")
+                    xx = xx + out
+                    h = rmsnorm(xx, pp["norm_ffn"])
+                    y, aux_i = moe_stage_body(h, pp["moe"], cfg,
+                                              ep_axis=ep_axis,
+                                              stat_axes=stat_axes)
+                    xx = xx + y
+                aux = aux + aux_i
+            elif explicit:
                 if mixer != "attn" or ffn not in ("mlp", "none"):
                     raise NotImplementedError(
                         "explicit-TP pipeline stages support attention + "
@@ -199,6 +244,20 @@ def pipeline_stage_body(p_stage, x, cfg, policy, *, positions):
                 xx, _, _ = sublayer_apply(pp, xx, cfg, None, i,
                                           positions=positions, mode="train",
                                           ctx_axis=ctx_axis)
+        return xx, aux
+
+    if has_moe:
+        def one_superblock_aux(carry, p_blk):
+            xx, aux = carry
+            xx, aux_i = apply_block(xx, p_blk)
+            return (xx, aux + aux_i), None
+
+        (x, aux), _ = jax.lax.scan(
+            one_superblock_aux, (x, jnp.zeros((), jnp.float32)), p_stage)
+        return x, aux
+
+    def one_superblock(xx, p_blk):
+        xx, _ = apply_block(xx, p_blk)
         return xx, None
 
     x, _ = jax.lax.scan(one_superblock, x, p_stage)

@@ -61,11 +61,6 @@ def _check_pipelineable(cfg):
     if cfg.frontend != "none":
         raise NotImplementedError(
             "pipeline cut supports token frontends only")
-    if cfg.num_experts:
-        raise NotImplementedError(
-            "pipeline cut does not thread the MoE load-balance auxiliary "
-            "loss through the schedule yet; silently dropping it would "
-            "diverge from build_train_step")
 
 
 def to_pipeline_params(cfg, params, num_stages: int):
@@ -110,9 +105,13 @@ def pipeline_param_parts(cfg, policy, pparams):
     Stage leaves lead with the ``pipe`` axis (the stacked stage dim); under
     ``policy.explicit_tp`` the projection/norm leaves additionally carry
     their model-axis TP sharding (mirroring the fused TP sublayer's specs).
-    pre/post leaves stay replicated.  No declaration names the data axis:
-    on a hybrid 3-D mesh all parameters are replicated across DP replicas
-    (the broadcast whose adjoint is the drain-tail gradient sum-reduce).
+    MoE expert weights shard their E dim over the logical ``ep`` axis (the
+    dedicated expert-parallel axis when live, replicated otherwise —
+    DESIGN §8); router/shared-expert leaves stay ep-replicated (their
+    dispatch runs identically on every ep rank).  pre/post leaves stay
+    replicated.  No declaration names the data axis: on a hybrid mesh all
+    parameters are replicated across DP replicas (the broadcast whose
+    adjoint is the drain-tail gradient sum-reduce).
     """
     from repro.sharding import Partitioned
 
@@ -123,10 +122,21 @@ def pipeline_param_parts(cfg, policy, pparams):
     tp_table = {"wq": col, "wk": col, "wv": col, "wo": row,
                 "w_up": col, "w_gate": col, "w_down": row,
                 "norm_mixer": vec, "norm_ffn": vec}
+    # (S, per, E, ..., ...): E — dim 2 — splits over the ep axis.
+    expert_part = Partitioned("pipe", None, "ep", None, None)
 
     def stage_part(path, leaf):
         del leaf
-        name = getattr(path[-1], "key", None)
+        keys = [getattr(k, "key", None) for k in path]
+        name = keys[-1]
+        if "moe" in keys:
+            # MoE sublayer (models/moe.py::moe_stage_body): expert weights
+            # live in (E/ep, ...) blocks; everything else — router, shared
+            # experts — replicates over ep AND model (the dispatch math is
+            # duplicated on every model rank under explicit TP).
+            if name in ("we_up", "we_gate", "we_down"):
+                return expert_part
+            return Partitioned("pipe")
         if explicit and name in tp_table:
             return tp_table[name]
         return Partitioned("pipe")
@@ -140,7 +150,7 @@ def pipeline_param_parts(cfg, policy, pparams):
     }
 
 
-def pipeline_fns(cfg, policy):
+def pipeline_fns(cfg, policy, aux_weight: float = 0.01):
     """(pre_fn, stage_fn, logits_fn) for the pipeline executor.
 
     pre_fn embeds a token microbatch (and feature-shards the residual under
@@ -148,6 +158,11 @@ def pipeline_fns(cfg, policy):
     the model axis, see pipeline_value_and_grad's ``pre_psum_axes``);
     stage_fn applies this stage's superblocks; logits_fn gathers the
     features back and applies final norm + head.
+
+    MoE configs make stage_fn return ``(act, aux_weight * aux)`` — the
+    stage's weighted load-balance auxiliary loss on the executor's
+    ``stage_aux`` channel (same ``aux_weight`` default as
+    train.build_loss_fn); dense configs return the bare activation.
     """
     from repro.core import layers as L
     from repro.core import primitives as prim
@@ -155,6 +170,7 @@ def pipeline_fns(cfg, policy):
     _check_pipelineable(cfg)
     explicit = policy is not None and getattr(policy, "explicit_tp", False)
     dtype = jnp.dtype(cfg.dtype)
+    has_moe = bool(cfg.num_experts)
 
     def pre_fn(p_pre, mb):
         x = jnp.take(p_pre["embed"], mb["tokens"], axis=0).astype(dtype)
@@ -173,8 +189,12 @@ def pipeline_fns(cfg, policy):
             pos0 = jax.lax.axis_index(ctx) * S_loc
         positions = jnp.broadcast_to(pos0 + jnp.arange(S_loc)[None, :],
                                      (B, S_loc))
-        return pipeline_stage_body(p_stage, x, cfg, policy,
-                                   positions=positions)
+        out = pipeline_stage_body(p_stage, x, cfg, policy,
+                                  positions=positions)
+        if has_moe:
+            y, aux = out
+            return y, aux_weight * aux
+        return out
 
     def logits_fn(p_post, y):
         if explicit:

@@ -1,21 +1,37 @@
-"""Mixture-of-Experts with expert parallelism via the paper's primitives.
+"""Mixture-of-Experts: dispatch/combine as AllToAll adjoints on the ep axis.
 
-The token dispatch/combine is the paper's *generalized all-to-all* (§3): a
-block permutation of send-receives repartitioning the dispatch buffer from
-token-major to expert-major layout; its adjoint is the reverse all-to-all.
-Expert weights are stored ZeRO-3-sharded over the data axis and gathered on
-use — the gather is the paper's broadcast B, its gradient reduce-scatter the
-adjoint R (Eq. 9).
+The token dispatch/combine is the paper's *generalized all-to-all* (§3),
+reified as the ``AllToAll`` linop: a block permutation repartitioning the
+dispatch buffer from token-slot-major ``(E, C, d)`` to expert-major
+``(E/ep, C*ep, d)`` over the DEDICATED ``ep`` mesh axis; the combine is its
+registered adjoint, the reverse all-to-all.  Capacity-factor slot
+assignment is the ``CapacityRestrict`` operator (core/linop.py): dispatch
+RESTRICTS the scatter buffer onto its first ``E*C`` slots (over-capacity
+tokens land in the dropped tail), and the combine applies its adjoint — the
+zero-padded embedding — so dropped tokens receive exactly zero output and
+zero cotangent by the algebra, not by a silent mask.  See DESIGN §8.
 
-Dispatch is sort-based with a static per-device capacity (tokens routed
-beyond capacity are dropped, standard GShard semantics); every index op is
-a linear gather/scatter, so JAX composes exact adjoints around our
-custom-vjp collectives.
+Axis resolution: ``Policy.active_ep_axis`` when the mesh carries a live
+``ep`` axis (the 5-D hybrid mesh, ``launch.make_hybrid_mesh(..., ep)``),
+else the legacy EP-over-model overload (``policy.model_axis``) so 2-D
+(data, model) meshes keep their pre-ep behavior.  Expert weights shard
+their E dim over the resolved axis (``param_spec`` logical "experts");
+with FSDP on, the hidden dims are additionally ZeRO-3-sharded over data
+and gathered on use — the gather is the paper's broadcast B, its gradient
+reduce-scatter the adjoint R (Eq. 9).
 
-Runs inside shard_map over (data, model): tokens arrive sharded over both
-(batch x sequence), experts are sharded over model (EP).  On a 1-device
-mesh every collective degenerates to the identity, so the same code path
-serves the CPU smoke tests.
+Two region styles serve the same math: ``moe_apply`` opens its own
+``dist_jit`` region (standalone sub-layer; smoke tests and the dense
+reference path), while ``moe_stage_body`` is the body-only form the
+pipeline executor's single shard_map region calls from
+``models/blocks.py`` — MoE-period configs run through
+``build_hybrid_train_step`` like every other layer.  Dispatch is
+sort-based with a static per-device capacity (GShard semantics); every
+index op is a linear gather/scatter, so JAX composes exact adjoints around
+our custom-vjp collectives.  On a 1-device mesh every collective
+degenerates to the identity, so the same code path serves the CPU smoke
+tests; ``num_experts % ep != 0`` raises at trace time instead of silently
+mis-splitting.
 """
 
 from __future__ import annotations
@@ -30,6 +46,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core import primitives as prim
 from repro.core.compile import dist_jit
+from repro.core.linop import AllToAll, CapacityRestrict
 from .common import dense_init, mlp_apply, mlp_init
 
 
@@ -51,10 +68,34 @@ def moe_init(key, cfg, dtype) -> dict:
     return p
 
 
-def _dispatch_combine_local(x, router_w, cfg, expert_fn):
+def _check_expert_split(cfg, ep: int, ep_axis):
+    """Trace-time guard: the E dim must split evenly over the ep axis — a
+    clamped split would silently drop the trailing experts."""
+    if cfg.num_experts % ep:
+        raise ValueError(
+            f"num_experts={cfg.num_experts} not divisible by ep={ep} over "
+            f"axis {ep_axis!r} — a clamped split would silently drop the "
+            f"trailing experts (see launch/specs.py::expert_assignment)")
+
+
+def _dispatch_combine_local(x, router_w, cfg, expert_fn, stat_axes=()):
     """Per-device routing: top-k -> sort -> capacity buffer -> expert_fn ->
     combine.  x: (T, d) local tokens.  expert_fn: (E, C, d) -> (E, C, d)
-    (may internally repartition E over the EP axis)."""
+    (may internally repartition E over the EP axis).
+
+    The scatter buffer has ``E*cap + 1`` slots; slot ``E*cap`` is the
+    dropped-token tail.  ``CapacityRestrict`` cuts the tail off before the
+    experts run, and its adjoint (the zero-padded embedding) restores the
+    slot layout on the way back — dropped tokens read zeros and their
+    cotangents vanish in the pad, adjoint-exactly.
+
+    ``stat_axes``: mesh axes the TOKENS are sharded over (data/ctx/ep in
+    the hybrid executor).  When given, the load-balance statistics (expert
+    counts, mean router probs) are reduced over them so ``aux`` equals the
+    exact global-microbatch statistic on every mesh — identical across
+    ranks, mesh-placement-invariant.  Empty (the default) keeps the local
+    statistic (pre-ep behavior; callers pmean afterwards).
+    """
     T, d = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
 
@@ -65,7 +106,13 @@ def _dispatch_combine_local(x, router_w, cfg, expert_fn):
 
     # load-balance auxiliary loss (Switch/GShard form)
     counts = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0)
-    aux = E * jnp.sum((counts / (T * k)) * probs.mean(axis=0))
+    counts_g, probs_g, T_g = counts, probs.mean(axis=0), T
+    if stat_axes:
+        counts_g = jax.lax.psum(counts_g, stat_axes)
+        probs_g = jax.lax.pmean(probs_g, stat_axes)
+        for ax in stat_axes:
+            T_g = T_g * compat.axis_size(ax)
+    aux = E * jnp.sum((counts_g / (T_g * k)) * probs_g)
 
     cap = int(math.ceil(T * k / E * cfg.capacity_factor))
     flat_e = gate_idx.reshape(-1)                       # (T*k,)
@@ -77,12 +124,15 @@ def _dispatch_combine_local(x, router_w, cfg, expert_fn):
     slot = jnp.where(keep, sorted_e * cap + pos, E * cap)  # drop slot = E*cap
     tok = order // k
 
+    # P_cap: keep the E*cap capacity slots, drop the over-capacity tail.
+    cap_op = CapacityRestrict(0, E * cap, E * cap + 1)
+
     buf = jnp.zeros((E * cap + 1, d), x.dtype)
     buf = buf.at[slot].add(jnp.where(keep[:, None], x[tok], 0))
-    out = expert_fn(buf[: E * cap].reshape(E, cap, d))     # (E, cap, d)
+    out = expert_fn(cap_op(buf).reshape(E, cap, d))        # (E, cap, d)
 
-    out_pad = jnp.concatenate([out.reshape(E * cap, d),
-                               jnp.zeros((1, d), out.dtype)])
+    # P_cap* — the zero-padded embedding: dropped slots read zeros.
+    out_pad = cap_op.T(out.reshape(E * cap, d))
     contrib = out_pad[slot] * (gate.reshape(-1)[order])[:, None]
     y = jnp.zeros((T, d), x.dtype).at[tok].add(
         jnp.where(keep[:, None], contrib, 0).astype(x.dtype))
@@ -90,17 +140,18 @@ def _dispatch_combine_local(x, router_w, cfg, expert_fn):
 
 
 def moe_block_fn(x, p, cfg, *, ep_axis, fsdp_axes, fsdp: bool, all_axes):
-    """shard_map body.  x: (B_loc, S_loc, d)."""
+    """shard_map body (standalone dist_jit region).  x: (B_loc, S_loc, d)."""
     Bl, Sl, d = x.shape
     xt = x.reshape(Bl * Sl, d)
     ep = compat.axis_size(ep_axis)
-    assert cfg.num_experts % ep == 0, (cfg.num_experts, ep)
+    _check_expert_split(cfg, ep, ep_axis)
+    dispatch = AllToAll(ep_axis, 0, 1)
 
     def expert_fn(disp):  # (E, C, d) local slots for ALL experts
         # Paper's generalized all-to-all: repartition token-slot-major ->
         # expert-major.  (E, C, d) -> (E/ep, C*ep, d).
         if ep > 1:
-            disp = prim.all_to_all(disp, ep_axis, 0, 1)
+            disp = dispatch(disp)
         wu, wg, wd = p["we_up"], p["we_gate"], p["we_down"]
         if fsdp:
             # ZeRO-3 gather = paper's broadcast B; grads reduce-scatter = R.
@@ -114,7 +165,7 @@ def moe_block_fn(x, p, cfg, *, ep_axis, fsdp_axes, fsdp: bool, all_axes):
         a = jax.nn.silu(g) * h
         out = jnp.einsum("ech,ehd->ecd", a, wd)
         if ep > 1:
-            out = prim.all_to_all(out, ep_axis, 1, 0)   # adjoint-direction
+            out = dispatch.T(out)   # combine: the registered adjoint
         return out
 
     y, aux = _dispatch_combine_local(xt, p["router"], cfg, expert_fn)
@@ -122,6 +173,43 @@ def moe_block_fn(x, p, cfg, *, ep_axis, fsdp_axes, fsdp: bool, all_axes):
     for ax in all_axes:
         aux = jax.lax.pmean(aux, ax)
     return y.reshape(Bl, Sl, d), aux
+
+
+def moe_stage_body(x, p, cfg, *, ep_axis=None, stat_axes=()):
+    """MoE sublayer body for MANUALLY SCHEDULED regions (the pipeline
+    executor's single shard_map; models/blocks.py).
+
+    x: (B_loc, S_loc, d) local tokens; p: the LOCAL moe param shards —
+    expert weights carry (E/ep, ...) blocks when ``ep_axis`` is live (the
+    executor's param partitioning, models/model.py), full (E, ...) when
+    not.  Dispatch/combine ride ``AllToAll(ep_axis, 0, 1)`` and its
+    adjoint exactly as in :func:`moe_block_fn`.  ``stat_axes`` (the live
+    token-sharding axes: data/ctx/ep) makes the aux loss the exact global
+    statistic, identical across those ranks — the executor's epilogue
+    psum x 1/(dp*cp*ep) then counts it exactly once.  Returns (y, aux).
+    """
+    Bl, Sl, d = x.shape
+    xt = x.reshape(Bl * Sl, d)
+    ep = compat.axis_size(ep_axis) if ep_axis else 1
+    _check_expert_split(cfg, ep, ep_axis)
+
+    def expert_fn(disp):  # (E, C, d) local slots for ALL experts
+        if ep > 1:
+            dispatch = AllToAll(ep_axis, 0, 1)
+            disp = dispatch(disp)                       # (E/ep, C*ep, d)
+        h = jnp.einsum("ecd,edh->ech", disp, p["we_up"])
+        g = jnp.einsum("ecd,edh->ech", disp, p["we_gate"])
+        out = jnp.einsum("ech,ehd->ecd", jax.nn.silu(g) * h, p["we_down"])
+        if ep > 1:
+            out = dispatch.T(out)                       # combine adjoint
+        return out
+
+    y, aux = _dispatch_combine_local(xt, p["router"], cfg, expert_fn,
+                                     stat_axes=stat_axes)
+    y = y.reshape(Bl, Sl, d)
+    if cfg.num_shared_experts:
+        y = y + mlp_apply(x, p["shared"], "swiglu")
+    return y, aux
 
 
 def moe_apply(x, p, cfg, policy):
@@ -152,9 +240,17 @@ def moe_apply(x, p, cfg, policy):
         import numpy as _np
         return phys if dim % int(_np.prod(sizes)) == 0 else None
 
-    dp = _fits(policy.phys("batch"), B)
+    # The dedicated ep axis when live (5-D hybrid mesh), else the legacy
+    # EP-over-model overload — matches param_spec's logical "experts".
+    ep_axis = policy.active_ep_axis or policy.model_axis
+    bp = policy.phys("batch")
+    if policy.active_ep_axis:
+        # a live ep axis sub-shards the token batch alongside data, exactly
+        # as the hybrid executor's Partitioned(None, ("data", "ep"), "ctx")
+        bp = ((tuple(bp) if isinstance(bp, tuple) else
+               ((bp,) if bp else ())) + (policy.active_ep_axis,))
+    dp = _fits(bp, B)
     sp = _fits(policy.phys("seq"), S)
-    ep_axis = policy.model_axis
     x_spec = P(dp, sp, None)
     w_specs = {
         "router": P(None, None),

@@ -16,7 +16,12 @@ The production mesh is (pod, data, model) (launch/mesh.py).  Logical axes:
                                    the mesh has no live ctx axis (DESIGN §6)
   heads   -> model                tensor parallelism (paper §4 affine P_fo)
   ff      -> model                TP on FFN hidden   (paper §4 affine P_fo)
-  experts -> model                expert parallelism (paper all-to-all)
+  experts -> ep_axis | model      expert parallelism (paper all-to-all): the
+                                   dedicated ep axis when live, else the
+                                   legacy EP-over-model overload (DESIGN §8)
+  ep      -> ep_axis              the expert-parallel dispatch axis itself
+                                   (AllToAll token shuffles, models/moe.py);
+                                   None when the mesh has no live ep axis
   vocab   -> model                TP on embedding / lm head
   fsdp    -> data (+pod)          ZeRO-3 parameter sharding: the per-layer
                                    gather is the paper's broadcast B, the
@@ -51,6 +56,9 @@ class Policy:
     ctx_axis: str | None = None          # context-parallel sequence-ring axis
                                          # (core/ring_attention.py; logical
                                          # "ctx"; see active_ctx_axis)
+    ep_axis: str | None = None           # expert-parallel dispatch axis
+                                         # (models/moe.py AllToAll; logical
+                                         # "ep"/"experts"; see active_ep_axis)
     fsdp: bool = True                    # ZeRO-3 param sharding over data
     fsdp_over_pod: bool = False          # also shard params over pod axis
     seq_shard: bool = True               # SP: residuals sharded over model
@@ -69,32 +77,38 @@ class Policy:
         shims): logical names resolve only through mesh axis names and
         explicit ``bind`` aliases."""
         names = tuple(mesh.axis_names)
-        if "ctx" in names:
+        if "ep" in names:
+            # 5-D hybrid mesh (launch.make_hybrid_mesh with ep > 1): the
+            # ep axis carries ONLY expert dispatch — never alias data or
+            # model onto it; the remaining axes assign as below.
+            kw.setdefault("ep_axis", "ep")
+        core = tuple(n for n in names if n != "ep")
+        if "ctx" in core:
             # 4-D hybrid mesh (launch.make_hybrid_mesh with cp > 1): the
             # ctx axis carries ONLY the sequence ring — never alias data or
             # model onto it.  Assignment of the remaining axes mirrors the
             # pipe/plain branches below over the ctx-free names.
             kw.setdefault("ctx_axis", "ctx")
-            rest = tuple(n for n in names if n not in ("pipe", "ctx"))
-            if "pipe" in names:
+            rest = tuple(n for n in core if n not in ("pipe", "ctx"))
+            if "pipe" in core:
                 kw.setdefault("pipe_axis", "pipe")
             else:
                 kw.setdefault("pipe_axis", None)
             kw.setdefault("model_axis", rest[-1] if rest else None)
             kw.setdefault("data_axis", rest[0] if len(rest) > 1 else None)
-        elif "pipe" in names:
+        elif "pipe" in core:
             # Pipeline mesh: never alias data/model onto the pipe axis, and
             # with a single non-pipe axis there is NO data axis — "batch"
             # must resolve replicated, not onto the TP axis.
-            non_pipe = tuple(n for n in names if n != "pipe")
+            non_pipe = tuple(n for n in core if n != "pipe")
             kw.setdefault("pipe_axis", "pipe")
             kw.setdefault("model_axis", non_pipe[-1] if non_pipe else None)
             kw.setdefault("data_axis",
                           non_pipe[0] if len(non_pipe) > 1 else None)
         else:
             kw.setdefault("pipe_axis", None)
-            kw.setdefault("data_axis", names[0])
-            kw.setdefault("model_axis", names[-1])
+            kw.setdefault("data_axis", core[0] if core else None)
+            kw.setdefault("model_axis", core[-1] if core else None)
         kw.setdefault("fsdp", False)
         kw.setdefault("seq_shard", False)
         return cls(mesh, **kw)
@@ -161,8 +175,18 @@ class Policy:
             # mesh carries no live ctx axis, so ctx-aware declarations
             # degenerate exactly to today's path at cp=1.
             return self.active_ctx_axis
-        if logical in ("heads", "ff", "experts", "vocab", "kvdim", "kvseq",
-                       "model"):
+        if logical == "experts":
+            # Expert parallelism: the dedicated ep axis when live, else the
+            # legacy EP-over-model overload (DESIGN §8) — so pre-ep configs
+            # keep resolving expert-sharded weights onto the model axis.
+            return self.active_ep_axis or self.model_axis
+        if logical == "ep":
+            # The expert dispatch axis itself (AllToAll token shuffles,
+            # models/moe.py).  None — replicated — whenever the mesh carries
+            # no live ep axis, so ep-aware declarations degenerate exactly
+            # to the 4-D path at ep=1.
+            return self.active_ep_axis
+        if logical in ("heads", "ff", "vocab", "kvdim", "kvseq", "model"):
             return self.model_axis
         if logical in ("pipe", "stage"):
             # Pipeline stage axis (stacked stage-param dim / StageBoundary
@@ -223,8 +247,29 @@ class Policy:
         return None
 
     @property
+    def active_ep_axis(self) -> str | None:
+        """``ep_axis`` if it names a LIVE mesh axis of size > 1, else None.
+
+        Mirrors ``active_ctx_axis`` as the single predicate for "is expert
+        parallelism on": MoE dispatch in ``models/moe.py``, logical
+        "ep"/"experts" resolution, the executor's ep psums and the train
+        step's divisibility check all route through it.  A size-1 ep axis
+        would still trace its all_to_all shuffles, so ep=1 deactivates here
+        and degenerates EXACTLY to the 4-D path, byte for byte.
+        """
+        if (self.ep_axis and self.ep_axis in self.mesh.axis_names
+                and self.axis_size(self.ep_axis) > 1):
+            return self.ep_axis
+        return None
+
+    @property
     def ctx_size(self) -> int:
         ax = self.active_ctx_axis
+        return self.axis_size(ax) if ax else 1
+
+    @property
+    def ep_size(self) -> int:
+        ax = self.active_ep_axis
         return self.axis_size(ax) if ax else 1
 
     @property

@@ -1,6 +1,7 @@
 from .loop import LoopConfig, StragglerMonitor, restart_on_failure, run  # noqa: F401
 from .step import (  # noqa: F401
     build_hybrid_train_step,
+    build_hybrid_value_and_grad,
     build_loss_fn,
     build_pipeline_train_step,
     build_train_step,

@@ -105,43 +105,20 @@ def build_train_step(cfg, policy, optimizer, *, aux_weight: float = 0.01,
     return train_step
 
 
-def build_hybrid_train_step(cfg, policy, optimizer, *,
-                            num_microbatches: int, schedule: str = "1f1b",
-                            max_grad_norm: float = 1.0):
-    """Train step over the hybrid DP x pipe x ctx x tensor mesh (DESIGN §5-6).
-
-    One scheduled SPMD executor call (core/pipeline.py) runs the WHOLE step
-    in ONE shard_map over ``policy.mesh``: the global batch is cut into
-    ``num_microbatches`` microbatches, each microbatch is restricted to
-    per-replica rows at the region boundary (the ``BatchScatter`` operator
-    over ``policy.data_axis``) AND to per-rank sequence shards over
-    ``policy.ctx_axis`` (ring attention rotates KV shards with
-    ``KVRingShift`` inside stage bodies — no sequence all-gather), every
-    replica drives the same fill-drain / 1F1B schedule over its ``pipe``
-    stages with TP ring collectives live inside stage bodies, and the
-    cross-replica/cross-shard gradient sum-reduce — the parameter
-    broadcast's Eq. 9 adjoint — rides the tail of the backward drain
-    inside the same region (no separate allreduce pass).
-
-    Degenerate factorizations reduce exactly: ``policy.data_axis`` unset or
-    dp=1 is the pure pipeline step (``build_pipeline_train_step``); cp=1
-    is byte-identical to the 3-D hybrid path (``active_ctx_axis`` is then
-    None everywhere); a single-stage mesh is pure DP x ctx x TP.
-    Microbatch loss/grad accumulation happens inside the schedule, so
-    ``cfg.grad_accum`` is subsumed by ``num_microbatches``.  State params
-    follow the {'pre','stage','post'} pipeline layout; clip + optimizer
-    update match ``build_train_step``; metrics carry the schedule's static
-    bubble fraction.  Raises ``ValueError`` at trace time when the batch
-    does not divide by microbatches x dp or the sequence does not divide
-    by cp (the ``BatchScatter`` contract).  Wrap in jax.jit.
-    """
+def build_hybrid_value_and_grad(cfg, policy, *, num_microbatches: int,
+                                schedule: str = "1f1b",
+                                aux_weight: float = 0.01):
+    """The scheduled executor call of ``build_hybrid_train_step``, factored:
+    ``(pvg, sched)`` where ``pvg(params, {"tokens": mbs}, label_mbs) ->
+    (loss, grads)`` over microbatched ``(M, B/M, S)`` inputs — so tests can
+    compare raw gradients across meshes without an optimizer in the way."""
     from repro.core.pipeline import make_schedule, pipeline_value_and_grad
     from repro.models.model import (init_pipeline_params, pipeline_fns,
                                     pipeline_param_parts)
     from repro.sharding import Partitioned
 
     sched = make_schedule(schedule, num_microbatches, policy.pipe_size)
-    pre_fn, stage_fn, logits_fn = pipeline_fns(cfg, policy)
+    pre_fn, stage_fn, logits_fn = pipeline_fns(cfg, policy, aux_weight)
 
     def post_fn(p_post, y, labels):
         loss, _ = cross_entropy(logits_fn(p_post, y), labels)
@@ -153,30 +130,94 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
     parts = pipeline_param_parts(cfg, policy, pspecs)
     explicit = getattr(policy, "explicit_tp", False)
     # Per-replica microbatch restriction: the in-boundary over the data axis
-    # IS the BatchScatter operator (core/linop.py), and the seq-dim boundary
-    # over the ctx axis is its sequence sibling (ring attention's shards);
-    # with no data/ctx axis the logical names resolve to None and the spec
-    # degenerates to replicated.
-    mb_part = Partitioned(None, "data", "ctx")
+    # IS the BatchScatter operator (core/linop.py), the seq-dim boundary
+    # over the ctx axis is its sequence sibling (ring attention's shards),
+    # and the ep axis sub-shards the batch dim alongside data (expert
+    # parallelism's token sharding, DESIGN §8); with no data/ctx/ep axis
+    # the logical names resolve to None and the spec degenerates to
+    # replicated.
+    mb_part = Partitioned(None, ("data", "ep"), "ctx")
+    ep_axis = policy.active_ep_axis
+    stage_psum_axes = None
+    if cfg.num_experts and ep_axis:
+        # Expert-weight shards hold DIFFERENT expert blocks per ep rank and
+        # the combine AllToAll already returned their full token
+        # cotangents: exclude ep from their drain-tail psum (every other
+        # leaf keeps the uniform data+ctx+ep reduction).
+        rep = tuple(a for a in (policy.active_data_axis,
+                                policy.active_ctx_axis, ep_axis) if a)
+
+        def stage_psum_axes(path):
+            keys = [getattr(k, "key", None) for k in path]
+            if "moe" in keys and keys[-1] in ("we_up", "we_gate", "we_down"):
+                return tuple(a for a in rep if a != ep_axis)
+            return rep
+
     pvg = pipeline_value_and_grad(
         pre_fn, stage_fn, post_fn, policy, sched,
         params_parts=parts,
         x_parts={"tokens": mb_part},
         y_parts=mb_part,
         pre_psum_axes=(policy.model_axis,) if explicit else (),
+        stage_psum_axes=stage_psum_axes,
+        stage_aux=bool(cfg.num_experts),
         jit=False)
+    return pvg, sched
+
+
+def build_hybrid_train_step(cfg, policy, optimizer, *,
+                            num_microbatches: int, schedule: str = "1f1b",
+                            max_grad_norm: float = 1.0,
+                            aux_weight: float = 0.01):
+    """Train step over the hybrid DP x pipe x ctx x tensor x expert mesh
+    (DESIGN §5-6, §8).
+
+    One scheduled SPMD executor call (core/pipeline.py) runs the WHOLE step
+    in ONE shard_map over ``policy.mesh``: the global batch is cut into
+    ``num_microbatches`` microbatches, each microbatch is restricted to
+    per-replica rows at the region boundary (the ``BatchScatter`` operator
+    over ``policy.data_axis``, sub-sharded again over ``policy.ep_axis``)
+    AND to per-rank sequence shards over ``policy.ctx_axis`` (ring
+    attention rotates KV shards with ``KVRingShift`` inside stage bodies —
+    no sequence all-gather), every replica drives the same fill-drain /
+    1F1B schedule over its ``pipe`` stages with TP ring collectives live
+    inside stage bodies, MoE sublayers dispatch tokens over the ep axis
+    (``AllToAll`` and its adjoint, models/moe.py) with their weighted
+    load-balance aux loss riding the executor's ``stage_aux`` channel, and
+    the cross-replica/cross-shard gradient sum-reduce — the parameter
+    broadcast's Eq. 9 adjoint — rides the tail of the backward drain
+    inside the same region (no separate allreduce pass).
+
+    Degenerate factorizations reduce exactly: ``policy.data_axis`` unset or
+    dp=1 is the pure pipeline step (``build_pipeline_train_step``); cp=1
+    is byte-identical to the 3-D hybrid path (``active_ctx_axis`` is then
+    None everywhere) and ep=1 likewise elides every ep collective; a
+    single-stage mesh is pure DP x ctx x TP x EP.
+    Microbatch loss/grad accumulation happens inside the schedule, so
+    ``cfg.grad_accum`` is subsumed by ``num_microbatches``.  State params
+    follow the {'pre','stage','post'} pipeline layout; clip + optimizer
+    update match ``build_train_step``; metrics carry the schedule's static
+    bubble fraction.  Raises ``ValueError`` at trace time when the batch
+    does not divide by microbatches x dp x ep, the sequence does not
+    divide by cp (the ``BatchScatter`` contract), or the experts do not
+    divide by ep (models/moe.py).  Wrap in jax.jit.
+    """
+    pvg, sched = build_hybrid_value_and_grad(
+        cfg, policy, num_microbatches=num_microbatches, schedule=schedule,
+        aux_weight=aux_weight)
     bubble = sched.bubble_fraction()
     data_axis = policy.active_data_axis
     dp = policy.axis_size(data_axis) if data_axis else 1
     cp = policy.ctx_size
+    ep = policy.ep_size
 
     def train_step(state, batch):
         params = state["params"]
         M = num_microbatches
-        if batch["tokens"].shape[0] % (M * dp):
+        if batch["tokens"].shape[0] % (M * dp * ep):
             raise ValueError(
                 f"global batch {batch['tokens'].shape[0]} not divisible by "
-                f"num_microbatches x dp = {M} x {dp}")
+                f"num_microbatches x dp x ep = {M} x {dp} x {ep}")
         if batch["tokens"].shape[-1] % cp:
             raise ValueError(
                 f"sequence length {batch['tokens'].shape[-1]} not divisible "

@@ -40,9 +40,12 @@ def _axis_choices():
         m2 = compat.make_mesh((2, 4), ("d0", "d1"))
         m3 = compat.make_mesh((2, 2, 2), ("data", "pipe", "model"))
         m4 = compat.make_mesh((2, 1, 2, 2), ("data", "pipe", "ctx", "model"))
+        m5 = compat.make_mesh((2, 1, 1, 2, 2),
+                              ("data", "pipe", "ctx", "model", "ep"))
         choices += [(m2, "d0", 2), (m2, "d1", 4),
                     (m3, "data", 2), (m3, "pipe", 2), (m3, "model", 2),
-                    (m4, "ctx", 2), (m4, "model", 2)]
+                    (m4, "ctx", 2), (m4, "model", 2),
+                    (m5, "ep", 2), (m5, "data", 2)]
     return choices
 
 

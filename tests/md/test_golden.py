@@ -28,6 +28,19 @@ CFG = ModelConfig(name="golden", family="dense", num_layers=4, d_model=64,
                   num_heads=8, num_kv_heads=4, head_dim=8, d_ff=128,
                   vocab_size=256, dtype="float32", remat=False, attn_chunk=16)
 
+# The MoE variant (PR 7): every other layer routes through 4 experts with
+# top-2 gating.  capacity_factor == num_experts makes the per-expert slot
+# count cover the worst-case load, so NO token is ever dropped and the
+# fp32 losses are sharding-invariant: local dispatch on one device, batch
+# sharded over (dp, ep), and expert-sharded (ep, tp) must all land in the
+# same family.
+MOE_CFG = ModelConfig(name="golden-moe", family="moe", num_layers=4,
+                      d_model=64, num_heads=8, num_kv_heads=4, head_dim=8,
+                      d_ff=128, vocab_size=256, dtype="float32", remat=False,
+                      attn_chunk=16, num_experts=4, experts_per_token=2,
+                      moe_d_ff=96, moe_layer_period=2, moe_offset=1,
+                      num_shared_experts=1, capacity_factor=4.0)
+
 # (loss after step 1, loss after step 2) — see module docstring to refresh.
 # Recorded on jax 0.4.37 / CPU / 8 emulated devices.  Step-1 loss is
 # IDENTICAL across the first three paths (same init, same batch, fp32) —
@@ -41,6 +54,13 @@ GOLDEN = {
     # over a cp=2 ring — step-1 loss in the SAME 6.103421688079834 family
     # (7.8e-8 relative: the ring merges score chunks in rotated order).
     "hybrid_cp_2x1x2x2": (6.103421211242676, 5.887178421020508),
+    # expert parallelism (PR 7): same init, same batch, no-drop capacity —
+    # step-1 loss IDENTICAL across local dispatch, (dp, ep) = (2, 4), and
+    # (ep, tp) = (4, 2), pinning the AllToAll dispatch/combine pair and the
+    # global aux-statistic reduction to the single-device reference.
+    "moe_local_1dev": (6.011422157287598, 5.779694557189941),
+    "moe_dp_ep_2x4": (6.011422157287598, 5.7796950340271),
+    "moe_ep_tp_4x2": (6.011422157287598, 5.779694557189941),
 }
 RTOL = 1e-4
 
@@ -71,16 +91,16 @@ def run_dense_1dev():
     return _two_losses(step, state, _batch(jax.random.PRNGKey(1)))
 
 
-def _run_scheduled(mesh, builder_kw):
+def _run_scheduled(mesh, builder_kw, cfg=CFG):
     from repro.optim import make_optimizer
     from repro.models import init_pipeline_params
     from repro.train import build_hybrid_train_step, init_train_state
 
     pol = Policy.for_mesh(mesh, explicit_tp=True)
     opt = make_optimizer("adamw", total_steps=10)
-    step = jax.jit(build_hybrid_train_step(CFG, pol, opt, **builder_kw))
-    params = init_pipeline_params(CFG, jax.random.PRNGKey(0), pol.pipe_size)
-    state = init_train_state(CFG, params, opt)
+    step = jax.jit(build_hybrid_train_step(cfg, pol, opt, **builder_kw))
+    params = init_pipeline_params(cfg, jax.random.PRNGKey(0), pol.pipe_size)
+    state = init_train_state(cfg, params, opt)
     return _two_losses(step, state, _batch(jax.random.PRNGKey(1)))
 
 
@@ -101,10 +121,37 @@ def run_hybrid_cp_2x1x2x2():
                           dict(num_microbatches=4, schedule="1f1b"))
 
 
+def run_moe_local_1dev():
+    """MoE local-dispatch reference: a (1, 1, 1) mesh — every axis is
+    inactive, so dispatch/combine never leave the worker."""
+    return _run_scheduled(make_hybrid_mesh(1, 1),
+                          dict(num_microbatches=2, schedule="1f1b"),
+                          cfg=MOE_CFG)
+
+
+def run_moe_dp_ep_2x4():
+    """(dp, ep) = (2, 4): tokens batch-sharded over BOTH axes, experts
+    sharded over ep — dispatch is the AllToAll adjoint pair (DESIGN §8)."""
+    return _run_scheduled(make_hybrid_mesh(2, 1, ep=4),
+                          dict(num_microbatches=2, schedule="1f1b"),
+                          cfg=MOE_CFG)
+
+
+def run_moe_ep_tp_4x2():
+    """(ep, tp) = (4, 2): expert parallelism composed with explicit tensor
+    parallelism inside each expert's dense sublayers."""
+    return _run_scheduled(make_hybrid_mesh(1, 1, tp=2, ep=4),
+                          dict(num_microbatches=2, schedule="1f1b"),
+                          cfg=MOE_CFG)
+
+
 RUNNERS = {"dense_1dev": run_dense_1dev,
            "pipeline_1f1b_4x2": run_pipeline_1f1b_4x2,
            "hybrid_2x2x2": run_hybrid_2x2x2,
-           "hybrid_cp_2x1x2x2": run_hybrid_cp_2x1x2x2}
+           "hybrid_cp_2x1x2x2": run_hybrid_cp_2x1x2x2,
+           "moe_local_1dev": run_moe_local_1dev,
+           "moe_dp_ep_2x4": run_moe_dp_ep_2x4,
+           "moe_ep_tp_4x2": run_moe_ep_tp_4x2}
 
 
 def _need(name):

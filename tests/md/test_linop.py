@@ -31,6 +31,8 @@ CONCRETE_OPS = [
     (linop.BatchScatter(AX, 1), (3, 16)),
     (linop.GradSumReduce(AX, 0), (16, 3)),
     (linop.GradSumReduce(AX, 1), (3, 16)),
+    (linop.CapacityRestrict(0, 12, 16), (16, 3)),
+    (linop.CapacityRestrict(1, 2, 4, embed=True), (3, 2)),
     (linop.HaloExchange(AX, 0, 2, 1), (32, 3)),
     (linop.HaloAccumulate(AX, 0, 2, 1), (56, 3)),
     (linop.HaloExchange(AX, 0,
@@ -84,6 +86,13 @@ COMPOSITES = [
     # the dim-mismatched AllGather(AX, 1) variant passes Eq. 13 too but has
     # no single consistent space reading — see tests/test_spaces.py)
     (linop.AllGather(AX, 0) @ linop.KVRingShift(AX, 1), (16, 4)),
+    # the MoE dispatch/combine round trip (DESIGN §8): scatter tokens into
+    # the EP-stacked space, restrict onto the E*cap capacity slots (dropping
+    # the over-capacity tail), repartition token-slot-major -> expert-major
+    # over the EP axis, and come straight back through the registered
+    # adjoint (the reverse all-to-all)
+    (linop.AllToAll(AX, 1, 0) @ linop.AllToAll(AX, 0, 1)
+     @ linop.CapacityRestrict(0, 8, 9) @ linop.BatchScatter(AX, 1), (9, 64)),
 ]
 
 
@@ -109,6 +118,9 @@ def test_reversal_law_structural():
     assert linop.AllReduce(AX).T == linop.AllReduce(AX)
     assert linop.BatchScatter(AX, 1).T == linop.GradSumReduce(AX, 1)
     assert linop.GradSumReduce(AX, 0).T == linop.BatchScatter(AX, 0)
+    assert (linop.CapacityRestrict(0, 6, 9).T
+            == linop.CapacityRestrict(0, 6, 9, embed=True))
+    assert linop.CapacityRestrict(0, 6, 9).T.T == linop.CapacityRestrict(0, 6, 9)
 
 
 def _random_chain(rng, n_ops: int, local0: int):

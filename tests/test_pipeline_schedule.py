@@ -144,17 +144,36 @@ def test_pipeline_input_specs_microbatched():
         pipeline_input_specs(cfg, "decode_32k", num_microbatches=2)
 
 
-def test_moe_configs_rejected():
-    """The pipeline cut must refuse MoE rather than silently dropping the
-    load-balance auxiliary loss (which build_train_step applies)."""
+def test_moe_stage_fn_carries_aux_channel():
+    """MoE rides the pipeline cut (DESIGN §8): stage_fn must return
+    ``(activation, weighted aux)`` on the executor's stage_aux channel so
+    the load-balance loss is never silently dropped; dense configs return
+    the bare activation."""
     import dataclasses
 
-    from repro.models import pipeline_fns
+    import jax
+    import jax.numpy as jnp
 
-    cfg = dataclasses.replace(_cfg(), num_experts=4, experts_per_token=2,
-                              moe_d_ff=64)
-    with pytest.raises(NotImplementedError, match="auxiliary"):
-        pipeline_fns(cfg, None)
+    from repro.models import init_pipeline_params, pipeline_fns
+
+    cfg = dataclasses.replace(_cfg(num_layers=2), family="moe",
+                              num_experts=4, experts_per_token=2,
+                              moe_d_ff=64, moe_layer_period=2, moe_offset=1)
+    params = init_pipeline_params(cfg, jax.random.PRNGKey(0), 1)
+    _, stage_fn, _ = pipeline_fns(cfg, None, aux_weight=0.5)
+    x = jnp.zeros((2, 16, cfg.d_model), jnp.float32)
+    out = stage_fn(jax.tree_util.tree_map(lambda a: a[0], params["stage"]), x)
+    assert isinstance(out, tuple) and len(out) == 2
+    y, aux = out
+    assert y.shape == x.shape and jnp.ndim(aux) == 0
+
+    _, dense_fn, _ = pipeline_fns(_cfg(num_layers=2), None)
+    dense_out = dense_fn(
+        jax.tree_util.tree_map(
+            lambda a: a[0],
+            init_pipeline_params(_cfg(num_layers=2),
+                                 jax.random.PRNGKey(0), 1)["stage"]), x)
+    assert not isinstance(dense_out, tuple)
 
 
 def test_make_pipeline_mesh_binds_policy():

@@ -33,8 +33,12 @@ def _random_state(rng, k):
 
 
 def _old_moves(k, space):
-    """The pre-PR-6 fuzzer's hand-rolled move table, ported VERBATIM as
-    ground truth (sig None == replicated, else the stacked tensor dim)."""
+    """Hand-rolled ground-truth move table: the pre-PR-6 fuzzer's table,
+    ported VERBATIM (sig None == replicated, else the stacked tensor dim),
+    plus the PR-7 CapacityRestrict rows (replicated space only — the op
+    typechecks everywhere, but its canonical boundary specs are replicated,
+    so the generator only offers it where a lifted chain can start or end
+    with it; embeds growth-capped)."""
     sig = None if space.kind == "replicated" else space.dim
     ls = list(space.local_shape)
     rank = len(ls)
@@ -64,6 +68,15 @@ def _old_moves(k, space):
                 mv.append(("halo", (left, right)))
             if ls[d] - left - right >= max(left, right, 1):
                 mv.append(("halo_acc", (left, right)))
+    if sig is None:
+        for cd in range(rank):
+            n = ls[cd]
+            if n >= 2:
+                for kp in sorted({n - 1, (n + 1) // 2}):
+                    mv.append(("cap_restrict", (cd, kp)))
+            for t in sorted({n + 1, 2 * n}):
+                if t <= MAX_DIM:
+                    mv.append(("cap_embed", (cd, t)))
     return mv
 
 
@@ -137,10 +150,46 @@ def test_generator_negative_space_is_rejected(k):
                 checked += 1
                 continue
             # Accepted by space_map but refused by the generator: must be a
-            # growth-cap (or identity-policy) refusal, never a typing hole.
+            # growth-cap, identity-policy, or boundary-spec-policy refusal
+            # (CapacityRestrict typechecks in stacked spaces but its
+            # canonical lift specs are replicated), never a typing hole.
             assert (mv[0] == "identity"
+                    or (mv[0] in ("cap_restrict", "cap_embed")
+                        and space.kind != "replicated")
                     or max(new.local_shape) > MAX_DIM), (space, mv)
     assert checked > 100  # the negative space is genuinely exercised
+
+
+def test_capacity_restrict_signature_on_ep():
+    """CapacityRestrict typing: ``total -> keep`` on replicated AND stacked
+    spaces (worker-local, stacking untouched); the adjoint is the
+    zero-padded embedding ``keep -> total``; the MoE dispatch composes it
+    with ``AllToAll`` on the dedicated ep axis (DESIGN §8)."""
+    sz = {"ep": 4}
+    cap = linop.CapacityRestrict(0, 8, 10)
+    for sp in (Space.replicated((10, 3)), Space.stacked("ep", 1, (10, 3))):
+        tr = spaces.typecheck(cap, sz, sp)
+        assert tr.out_space.local_shape == (8, 3)
+        assert tr.out_space.kind == sp.kind
+    tr = spaces.typecheck(cap.T, sz, Space.stacked("ep", 1, (8, 3)))
+    assert tr.out_space.local_shape == (10, 3)
+    # dispatch: restrict onto the E*cap capacity slots, then repartition
+    # token-slot-major -> expert-major over ep.
+    dispatch = linop.AllToAll("ep", 0, 1) @ linop.CapacityRestrict(0, 8, 9)
+    tr = spaces.typecheck(dispatch, sz, Space.stacked("ep", 1, (9, 5)))
+    assert tr.out_space == Space.stacked("ep", 0, (2, 20))
+
+
+def test_dispatch_after_combine_junction_rejected():
+    """Ill-typed dispatch-after-combine: the combine's codomain is the
+    RESTRICTED slot space (E*cap slots), so a dispatch expecting the padded
+    scatter buffer (E*cap+1 slots, dropped tail included) cannot follow it
+    — the static checker pins the off-by-capacity junction."""
+    combine = linop.AllToAll("ep", 1, 0)
+    redispatch = linop.AllToAll("ep", 0, 1) @ linop.CapacityRestrict(0, 8, 9)
+    with pytest.raises(SpaceTypeError, match="position 1"):
+        spaces.typecheck(redispatch @ combine, {"ep": 4},
+                         Space.stacked("ep", 0, (2, 8)))
 
 
 def test_known_ill_typed_composites_rejected_at_construction():
