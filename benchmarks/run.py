@@ -21,16 +21,21 @@
                    stats (per-expert token counts, drop fraction) at the
                    production capacity factor
   train_micro      end-to-end small-LM train-step timing (us/step)
+  resilience_overhead  the non-finite guard's cost (DESIGN §9): guard-on
+                   vs guard-off us/step on the GSPMD path AND the hybrid
+                   executor (where the skip decision is a live one-bit
+                   pmax all-reduce), asserting bitwise-identical losses
+                   and exactly one added all-reduce
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
 writes the machine-readable perf artifact (per-row us + structured extras
 + mesh factorization + device kind) the CI multidevice job uploads as
-BENCH_7.json — the gateable perf trajectory; ``--lint`` additionally runs
+BENCH_9.json — the gateable perf trajectory; ``--lint`` additionally runs
 ``repro.analysis.hlo_lint`` over the compiled programs and attaches the
 structured findings to the rows (an error-severity finding in a CP program
 fails the bench).  Run:
   PYTHONPATH=src python -m benchmarks.run [--only adjoint_table,...] \
-      [--json BENCH_7.json] [--lint]
+      [--json BENCH_9.json] [--lint]
 (uses 8 host devices; sets XLA_FLAGS when unset)
 """
 
@@ -678,6 +683,77 @@ def bench_train_micro():
          f"params={n/1e6:.1f}M;tok_per_s={tok/(us/1e6):.0f};loss={float(m['loss']):.3f}")
 
 
+def bench_resilience_overhead():
+    """Cost of the SPMD-consistent non-finite guard (DESIGN §9): the same
+    train step compiled with and without the one-bit skip decision.  On
+    the GSPMD path the agreement is free (single-program scalar); on the
+    hybrid executor it is one pmax all-reduce over the whole mesh — the
+    row records both us/step deltas, asserts the guard is numerically
+    inert (bitwise-identical fp32 loss on clean steps) and that the
+    hybrid program carries EXACTLY one extra all-reduce."""
+    from repro.configs import ModelConfig
+    from repro.data import DataConfig, SyntheticLM
+    from repro.launch.mesh import make_hybrid_mesh
+    from repro.models import init_params, init_pipeline_params
+    from repro.optim import make_optimizer
+    from repro.roofline.hlo_profile import collective_inventory
+    from repro.sharding import Policy
+    from repro.train import (build_hybrid_train_step, build_train_step,
+                             init_train_state)
+
+    cfg = ModelConfig(name="resil", family="dense", num_layers=4,
+                      d_model=128, num_heads=8, num_kv_heads=4, head_dim=16,
+                      d_ff=256, vocab_size=512, dtype="float32",
+                      remat=False, attn_chunk=32)
+    data = SyntheticLM(DataConfig(vocab_size=512, seq_len=64,
+                                  global_batch=16))
+    opt = make_optimizer("adamw", total_steps=100)
+    batch = data.batch(0)
+
+    # GSPMD (single-dispatch jit) path
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = init_train_state(cfg, params, opt)
+    on = jax.jit(build_train_step(cfg, None, opt))
+    off = jax.jit(build_train_step(cfg, None, opt, nonfinite_guard=False))
+    loss_on = float(on(state, batch)[1]["loss"])        # compile both
+    loss_off = float(off(state, batch)[1]["loss"])
+    assert loss_on == loss_off, (loss_on, loss_off)
+    us_on = timeit(lambda: on(state, batch)[1]["loss"], iters=10, warmup=2)
+    us_off = timeit(lambda: off(state, batch)[1]["loss"], iters=10, warmup=2)
+    emit("resilience_overhead/gspmd", us_on,
+         f"guard_off_us={us_off:.1f};overhead={us_on - us_off:+.1f}us"
+         f";loss_equal=True",
+         guard_on_us=us_on, guard_off_us=us_off, loss=loss_on)
+
+    # hybrid executor path: the skip decision is a live pmax all-reduce
+    pol = Policy.for_mesh(make_hybrid_mesh(2, 1, 2, 2), explicit_tp=True)
+    hkw = dict(num_microbatches=4, schedule="1f1b")
+    hon = jax.jit(build_hybrid_train_step(cfg, pol, opt, **hkw))
+    hoff = jax.jit(build_hybrid_train_step(cfg, pol, opt,
+                                           nonfinite_guard=False, **hkw))
+    pparams = init_pipeline_params(cfg, jax.random.PRNGKey(0), pol.pipe_size)
+    hstate = init_train_state(cfg, pparams, opt)
+    hloss_on = float(hon(hstate, batch)[1]["loss"])
+    hloss_off = float(hoff(hstate, batch)[1]["loss"])
+    assert hloss_on == hloss_off, (hloss_on, hloss_off)
+    inv_on = {k: v[0] for k, v in collective_inventory(
+        hon.lower(hstate, batch).compile().as_text()).items()}
+    inv_off = {k: v[0] for k, v in collective_inventory(
+        hoff.lower(hstate, batch).compile().as_text()).items()}
+    delta = {k: inv_on.get(k, 0) - inv_off.get(k, 0)
+             for k in set(inv_on) | set(inv_off)}
+    extra_ar = {k: v for k, v in delta.items() if v}
+    assert extra_ar == {"all-reduce": 1}, extra_ar
+    hus_on = timeit(lambda: hon(hstate, batch)[1]["loss"], iters=10, warmup=2)
+    hus_off = timeit(lambda: hoff(hstate, batch)[1]["loss"], iters=10,
+                     warmup=2)
+    emit("resilience_overhead/hybrid_2x1x2x2", hus_on,
+         f"guard_off_us={hus_off:.1f};overhead={hus_on - hus_off:+.1f}us"
+         f";extra_allreduce=1;loss_equal=True",
+         guard_on_us=hus_on, guard_off_us=hus_off, loss=hloss_on,
+         collective_delta=extra_ar)
+
+
 BENCHES = {
     "adjoint_table": bench_adjoint_table,
     "lenet_equiv": bench_lenet_equiv,
@@ -691,6 +767,7 @@ BENCHES = {
     "ring_attention": bench_ring_attention,
     "moe_ep": bench_moe_ep,
     "train_micro": bench_train_micro,
+    "resilience_overhead": bench_resilience_overhead,
 }
 
 
@@ -699,7 +776,7 @@ def main():
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the machine-readable perf artifact "
-                         "(BENCH_7.json in CI)")
+                         "(BENCH_9.json in CI)")
     ap.add_argument("--lint", action="store_true",
                     help="run repro.analysis.hlo_lint over the compiled "
                          "programs and attach findings to the json rows "

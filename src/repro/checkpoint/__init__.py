@@ -1,2 +1,11 @@
 from . import ckpt  # noqa: F401
-from .ckpt import latest_step, restore, save, save_async, wait_pending  # noqa: F401
+from .ckpt import (  # noqa: F401
+    CorruptCheckpointError,
+    latest_step,
+    quarantine,
+    restore,
+    restore_latest_verified,
+    save,
+    save_async,
+    wait_pending,
+)

@@ -1,12 +1,23 @@
-"""Fault-tolerant checkpointing: atomic, keep-k, async, mesh-agnostic.
+"""Fault-tolerant checkpointing: atomic, verified, keep-k, async, elastic.
 
 - **Atomic**: a checkpoint is written to ``step_XXXX.tmp`` and renamed only
   after every array and the manifest are on disk — a crash mid-write never
   corrupts the latest restorable state.
+- **Verified**: the manifest records a crc32 per array; ``restore`` checks
+  every byte it loads and raises :class:`CorruptCheckpointError` on any
+  mismatch, unreadable file, or unreadable manifest — a torn write or bad
+  sector is an explicit, recoverable event, never silently-wrong weights.
+  ``restore_latest_verified`` walks checkpoints newest-first, quarantines
+  corrupt ones as ``<dir>.corrupt``, and falls back to the previous intact
+  one (DESIGN §9).
 - **Keep-k**: older checkpoints are garbage-collected after a successful
-  save (the newest k survive).
+  save (the newest k survive).  GC and saves to the same directory hold a
+  per-directory lock, so gc never races an in-flight write.
 - **Async**: ``save_async`` snapshots device arrays to host and writes on a
-  background thread, overlapping I/O with the next train steps.
+  background thread, overlapping I/O with the next train steps.  Thread
+  failures are captured and the first one re-raised by ``wait_pending()``
+  — a failed background save is a loud event, not a silently missing
+  checkpoint discovered at restore time.
 - **Mesh-agnostic (elastic)**: arrays are stored *logically* (full, host
   numpy); ``restore`` re-shards onto whatever mesh/policy the restarted job
   runs with — the elastic-scaling path (save on mesh A, restore on mesh B)
@@ -19,11 +30,34 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
+import zlib
 
 import jax
 import numpy as np
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint failed verification: checksum mismatch, unreadable
+    array file, or unreadable manifest.  Recoverable — fall back to the
+    previous intact checkpoint (``restore_latest_verified``)."""
+
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+# One lock per checkpoint directory: saves (sync or async) and the gc they
+# trigger are serialized per-dir, so gc never deletes under an in-flight
+# write and two async saves never interleave inside one directory.
+_dir_locks: dict[str, threading.Lock] = {}
+_dir_locks_guard = threading.Lock()
+
+
+def _dir_lock(ckpt_dir: str) -> threading.Lock:
+    key = os.path.abspath(ckpt_dir)
+    with _dir_locks_guard:
+        return _dir_locks.setdefault(key, threading.Lock())
 
 
 def _tree_paths(tree):
@@ -38,73 +72,138 @@ def save(ckpt_dir: str, step: int, state, keep: int = 3) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+    with _dir_lock(ckpt_dir):
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
 
-    keys, leaves, _ = _tree_paths(state)
-    manifest = {"step": step, "leaves": []}
-    for i, (key, leaf) in enumerate(zip(keys, leaves)):
-        arr = np.asarray(jax.device_get(leaf))
-        np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
-        manifest["leaves"].append(
-            {"key": key, "file": f"arr_{i}.npy", "shape": list(arr.shape),
-             "dtype": str(arr.dtype)})
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)          # atomicity boundary
-    _gc(ckpt_dir, keep)
+        keys, leaves, _ = _tree_paths(state)
+        manifest = {"step": step, "leaves": []}
+        for i, (key, leaf) in enumerate(zip(keys, leaves)):
+            arr = np.asarray(jax.device_get(leaf))
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
+            manifest["leaves"].append(
+                {"key": key, "file": f"arr_{i}.npy", "shape": list(arr.shape),
+                 "dtype": str(arr.dtype), "crc32": zlib.crc32(arr.tobytes())})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomicity boundary
+        _gc(ckpt_dir, keep)
     return final
 
 
 _pending: list[threading.Thread] = []
+_async_errors: list[BaseException] = []
+_pending_guard = threading.Lock()
 
 
 def save_async(ckpt_dir: str, step: int, state, keep: int = 3):
-    """Snapshot to host now; write on a background thread."""
+    """Snapshot to host now; write on a background thread.
+
+    Failures on the thread are captured and the FIRST one re-raised by
+    :func:`wait_pending` — a dropped exception here would surface much
+    later as a mysteriously missing checkpoint.  Finished threads are
+    pruned on every call, so ``_pending`` stays bounded over long runs.
+    """
     host_state = jax.tree_util.tree_map(
         lambda l: np.asarray(jax.device_get(l)), state)
-    t = threading.Thread(target=save, args=(ckpt_dir, step, host_state, keep),
-                         daemon=True)
+
+    def target():
+        try:
+            save(ckpt_dir, step, host_state, keep)
+        except BaseException as e:        # noqa: BLE001 — re-raised in wait_pending
+            with _pending_guard:
+                _async_errors.append(e)
+
+    t = threading.Thread(target=target, daemon=True)
+    with _pending_guard:
+        _pending[:] = [p for p in _pending if p.is_alive()]
+        _pending.append(t)
     t.start()
-    _pending.append(t)
     return t
 
 
 def wait_pending():
-    for t in _pending:
+    """Join all outstanding async saves; re-raise the first failure."""
+    with _pending_guard:
+        threads = list(_pending)
+    for t in threads:
         t.join()
-    _pending.clear()
+    with _pending_guard:
+        _pending[:] = [p for p in _pending if p.is_alive()]
+        errors = list(_async_errors)
+        _async_errors.clear()
+    if errors:
+        raise errors[0]
+
+
+def _intact_steps(ckpt_dir: str) -> list[int]:
+    """Steps of finalized checkpoints, ascending.  A dir counts only when
+    it matches ``step_<8 digits>`` exactly AND contains a manifest — a
+    half-deleted dir (gc/crash race), a ``.tmp`` in flight, or a
+    quarantined ``.corrupt`` never looks like a restorable checkpoint."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(d)
+        if m and os.path.isfile(os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
 
 
 def latest_step(ckpt_dir: str) -> int | None:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+    steps = _intact_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _load_verified(path: str, entry) -> np.ndarray:
+    """np.load + crc32 check; any failure is a CorruptCheckpointError."""
+    try:
+        arr = np.load(os.path.join(path, entry["file"]))
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"unreadable array {entry['file']} in {path}: {e}") from e
+    want = entry.get("crc32")
+    if want is not None:
+        got = zlib.crc32(arr.tobytes())
+        if got != want:
+            raise CorruptCheckpointError(
+                f"checksum mismatch for {entry['key']} in {path}: "
+                f"crc32 {got} != manifest {want}")
+    return arr
 
 
 def restore(ckpt_dir: str, step: int | None = None, like=None, shardings=None):
-    """Load a checkpoint.  ``like`` (a pytree of arrays/ShapeDtypeStructs)
-    provides the tree structure; ``shardings`` (matching pytree of
-    NamedSharding) re-shards onto the CURRENT mesh — which may differ from
-    the mesh that saved (elastic restart)."""
+    """Load a checkpoint, verifying every array against its manifest crc32.
+
+    ``like`` (a pytree of arrays/ShapeDtypeStructs) provides the tree
+    structure; ``shardings`` (matching pytree of NamedSharding) re-shards
+    onto the CURRENT mesh — which may differ from the mesh that saved
+    (elastic restart).  Raises :class:`CorruptCheckpointError` when the
+    manifest or an array fails to load/verify, ``ValueError`` on a
+    shape OR dtype mismatch against ``like`` — a dtype mismatch used to
+    silently ``astype`` (precision-destroying on e.g. fp32 moments saved
+    from a run that kept them in bf16); now it is an explicit error.
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"unreadable manifest in {path}: {e}") from e
     by_key = {e["key"]: e for e in manifest["leaves"]}
 
     if like is None:
         # reconstruct a flat dict
-        out = {e["key"]: np.load(os.path.join(path, e["file"]))
-               for e in manifest["leaves"]}
+        out = {e["key"]: _load_verified(path, e) for e in manifest["leaves"]}
         return out, step
 
     keys, leaves, treedef = _tree_paths(like)
@@ -115,18 +214,63 @@ def restore(ckpt_dir: str, step: int | None = None, like=None, shardings=None):
         entry = by_key.get(key)
         if entry is None:
             raise KeyError(f"checkpoint missing leaf {key}")
-        arr = np.load(os.path.join(path, entry["file"]))
+        arr = _load_verified(path, entry)
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {leaf.shape}")
-        arr = arr.astype(leaf.dtype)
+        if arr.dtype != np.dtype(leaf.dtype):
+            raise ValueError(
+                f"dtype mismatch for {key}: checkpoint {arr.dtype} vs "
+                f"expected {np.dtype(leaf.dtype)} — cast explicitly if the "
+                f"precision change is intended")
         loaded.append(jax.device_put(arr, shd) if shd is not None
                       else jax.device_put(arr))
     return jax.tree_util.tree_unflatten(treedef, loaded), step
 
 
+def quarantine(ckpt_dir: str, step: int) -> str:
+    """Rename a bad checkpoint dir out of the restorable namespace.
+
+    ``step_XXXXXXXX`` -> ``step_XXXXXXXX.corrupt`` (``.corrupt.N`` if
+    taken) — kept on disk for forensics, invisible to ``latest_step``,
+    ``restore`` and gc.  Returns the new path.
+    """
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    dst = src + ".corrupt"
+    n = 0
+    while os.path.exists(dst):
+        n += 1
+        dst = src + f".corrupt.{n}"
+    os.rename(src, dst)
+    return dst
+
+
+def restore_latest_verified(ckpt_dir: str, like=None, shardings=None, *,
+                            quarantine_bad: bool = True, logger=None):
+    """Restore the newest checkpoint that passes verification.
+
+    Walks finalized checkpoints newest-first; on
+    :class:`CorruptCheckpointError` the bad dir is quarantined as
+    ``.corrupt`` (when ``quarantine_bad``) and the previous one is tried —
+    the DESIGN §9 fallback path.  Returns ``(state, step, quarantined)``
+    with ``quarantined`` the list of quarantined step numbers, or ``None``
+    when no intact checkpoint exists (cold start).
+    """
+    quarantined: list[int] = []
+    for step in reversed(_intact_steps(ckpt_dir)):
+        try:
+            state, got = restore(ckpt_dir, step, like=like, shardings=shardings)
+            return state, got, quarantined
+        except CorruptCheckpointError as e:
+            if logger:
+                logger(f"checkpoint step {step} corrupt: {e}")
+            if quarantine_bad:
+                quarantine(ckpt_dir, step)
+                quarantined.append(step)
+    return None
+
+
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-                   if d.startswith("step_") and not d.endswith(".tmp"))
+    steps = _intact_steps(ckpt_dir)
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

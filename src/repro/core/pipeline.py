@@ -268,7 +268,9 @@ def _masked_add(acc, contrib, mask):
 def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
                             params_parts, x_parts, y_parts,
                             pre_psum_axes=(), post_psum_axes=(),
-                            stage_psum_axes=None, stage_aux=False, jit=True):
+                            stage_psum_axes=None, stage_aux=False,
+                            nonfinite_flag=False, grad_fault_hook=None,
+                            jit=True):
     """Build ``f(params, xs, ys) -> (loss, grads)`` for a scheduled pipeline.
 
     The returned function runs the whole schedule inside ONE shard_map over
@@ -318,6 +320,26 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
                 AllToAll already returned their full token cotangents, so
                 each ep rank's shard gradient is complete — psumming it
                 would add gradients of DIFFERENT expert blocks.
+      nonfinite_flag: when True the function ALSO returns a globally-agreed
+                one-bit non-finite indicator: ``f -> (loss, grads, flag)``
+                with ``flag`` int32 0/1, 1 iff ANY rank saw a non-finite
+                value in its loss or gradient shards.  The agreement is a
+                single max-AllReduce over EVERY mesh axis — the skip
+                decision as AllReduce on the one-bit space (DESIGN §9).
+                ``pmax`` (not psum) keeps its reduction computation
+                distinct from the drain-tail add-psums so XLA's
+                all-reduce combiner cannot merge them, and the decision
+                survives Inf-overflow arithmetic that would poison a sum.
+                The flag is computed inside the SAME region: no second
+                dispatch, no divergent control flow.
+      grad_fault_hook: optional traceable ``grads -> grads`` applied to the
+                assembled gradient tree inside the region (after the
+                drain-tail psums, before the non-finite flag) — the
+                compiled-in fault-injection point for
+                ``resilience/inject.py`` (batches are integer token ids,
+                so NaN must enter at the gradient tree).  Compiled into
+                the region; pair with a clean variant for fire-once
+                semantics.
       stage_aux: when True, ``stage_fn`` returns ``(act, aux)`` with
                 ``aux`` a float scalar side loss (e.g. the MoE
                 load-balance term, models/moe.py).  Each stage adds its
@@ -504,9 +526,24 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
                 lambda g: jnp.expand_dims(g * inv_m, 0), g_stage),
             "post": scale(g_post),
         }
-        return loss, grads
+        if grad_fault_hook is not None:
+            grads = grad_fault_hook(grads)
+        if not nonfinite_flag:
+            return loss, grads
+        # DESIGN §9: the skip decision as a one-bit AllReduce.  Each rank
+        # reduces its loss + gradient SHARDS to a single local bit, then one
+        # pmax over every mesh axis agrees it globally — pmax's max
+        # combiner keeps this collective distinct from the add-psums above
+        # (the all-reduce combiner pass cannot merge them), so the guarded
+        # step compiles to EXACTLY ONE extra all-reduce.  Every rank
+        # returns the same flag: the caller's where-select never diverges.
+        from repro.resilience.guard import nonfinite_flag as _nf_flag
+        local = _nf_flag((loss, grads))
+        flag = jax.lax.pmax(local, tuple(policy.mesh.axis_names))
+        return loss, grads, flag
 
     from jax.sharding import PartitionSpec as P
-    out_parts = (P(), params_parts)
+    out_parts = ((P(), params_parts, P()) if nonfinite_flag
+                 else (P(), params_parts))
     return dist_jit(body, policy, (params_parts, x_parts, y_parts),
                     out_parts, jit=jit)

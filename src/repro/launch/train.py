@@ -17,7 +17,11 @@ expert shards over the ep axis via AllToAll):
 On this CPU container use --reduced (tiny same-family config); on real
 hardware drop it and point the mesh at the pod.  The loop is the fault-
 tolerant one from train/loop.py (atomic checkpoints, auto-resume,
-straggler monitor).
+straggler monitor, SPMD-consistent non-finite skip).  ``--fault-plan``
+turns on the deterministic chaos harness (resilience/inject.py) — e.g.
+``--fault-plan poison=5,crash=9,corrupt=bitflip`` NaN-poisons step 5's
+gradients (the guard skips), crashes at step 9 bit-flipping the newest
+checkpoint, and the supervisor quarantines it, falls back, and resumes.
 """
 
 from __future__ import annotations
@@ -32,6 +36,7 @@ from repro.data import DataConfig, PrefetchIterator, SyntheticLM
 from repro.launch.mesh import make_host_mesh, make_hybrid_mesh
 from repro.models import init_params, init_pipeline_params
 from repro.optim import make_optimizer
+from repro.resilience import FaultInjector, FaultPlan, nan_grad_hook
 from repro.sharding import Policy
 from repro.train import (LoopConfig, build_hybrid_train_step,
                          build_train_step, init_train_state,
@@ -64,6 +69,21 @@ def main():
                     help="route train attention through kernels.ops."
                          "flash_attention (REPRO_KERNEL_IMPL selects "
                          "xla/pallas/pallas_interpret); GSPMD path only")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="inject deterministic faults (resilience/inject.py)"
+                         ": comma-separated tokens, e.g. 'poison=5,crash=9,"
+                         "corrupt=bitflip,slow=4:0.2,seed=1'; keys: poison "
+                         "(NaN gradients at steps, '+'-joined), value "
+                         "(nan/inf), crash, corrupt (bitflip|truncate the "
+                         "newest checkpoint on crash), array (corrupt "
+                         "target key substring), slow (step:seconds), "
+                         "seed, persistent (faults re-fire on replay)")
+    ap.add_argument("--rollback-after-skips", type=int, default=None,
+                    help="NaN-streak threshold: after this many consecutive "
+                         "guard-skipped steps, roll back to the last good "
+                         "checkpoint and advance the data stream past the "
+                         "poisoned window")
+    ap.add_argument("--max-restarts", type=int, default=3)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -105,6 +125,7 @@ def main():
     opt = make_optimizer(cfg.optimizer, total_steps=args.steps,
                          base_lr=args.lr)
     cfg = dataclasses.replace(cfg, grad_accum=1)
+    plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
     if hybrid:
         step = jax.jit(build_hybrid_train_step(
             cfg, policy, opt, num_microbatches=args.microbatches,
@@ -112,6 +133,20 @@ def main():
     else:
         step = jax.jit(build_train_step(cfg, policy, opt,
                                         use_flash=args.use_flash))
+    if plan is not None:
+        # the poisoned sibling is a second compiled variant of the SAME
+        # builder with the gradient fault hook traced in; the injector
+        # chooses between them on the host (fire-once across restarts)
+        hook = nan_grad_hook(plan.poison_value)
+        if hybrid:
+            poisoned = jax.jit(build_hybrid_train_step(
+                cfg, policy, opt, num_microbatches=args.microbatches,
+                schedule=args.schedule, fault_hook=hook))
+        else:
+            poisoned = jax.jit(build_train_step(
+                cfg, policy, opt, use_flash=args.use_flash, fault_hook=hook))
+        step = FaultInjector(plan, step, poisoned_step_fn=poisoned,
+                             ckpt_dir=args.ckpt_dir)
 
     def make_state():
         if hybrid:
@@ -127,9 +162,14 @@ def main():
         return PrefetchIterator(data, start_step=start)
 
     loop_cfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                          ckpt_every=args.ckpt_every, log_every=10)
-    state, hist = restart_on_failure(make_state, step, make_iter, loop_cfg)
-    print(f"done: final loss {hist[-1]['loss']:.4f} over {len(hist)} steps")
+                          ckpt_every=args.ckpt_every, log_every=10,
+                          rollback_after_skips=args.rollback_after_skips)
+    state, hist = restart_on_failure(make_state, step, make_iter, loop_cfg,
+                                     max_restarts=args.max_restarts)
+    health = " ".join(f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
+                      for k, v in hist.health.items())
+    print(f"done: final loss {hist[-1]['loss']:.4f} over {len(hist)} steps  "
+          f"[{health}]")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+"""Resilience: SPMD-consistent non-finite guards, fault injection,
+verified recovery (DESIGN §9).
+
+The skip decision is an AllReduce on the one-bit space — fault handling
+stays inside the single-dispatch region like every other operator.
+"""
+
+from repro.resilience.guard import (apply_guard, nonfinite_count,
+                                    nonfinite_flag, tree_where)
+from repro.resilience.inject import (FaultInjector, FaultPlan, InjectedCrash,
+                                     corrupt_checkpoint, nan_grad_hook,
+                                     poison_batch)
+
+__all__ = [
+    "apply_guard", "nonfinite_count", "nonfinite_flag", "tree_where",
+    "FaultInjector", "FaultPlan", "InjectedCrash", "corrupt_checkpoint",
+    "nan_grad_hook", "poison_batch",
+]

@@ -1,0 +1,93 @@
+"""SPMD-consistent non-finite gradient guard (DESIGN §9).
+
+At cluster scale a NaN/Inf burst in one microbatch is the steady state,
+not the exception.  The classic failure mode is a *per-rank* skip
+decision: rank r sees a non-finite local gradient shard, takes an early
+exit, and every collective the other ranks are still parked on deadlocks
+— exactly the fail-stop MPI inheritance the paper's single-dispatch
+stance avoids, and exactly what ``analysis/hlo_lint``'s
+``divergent-collective`` rule rejects structurally.
+
+The algebra gives the principled fix: *the skip decision is itself a
+one-bit AllReduce*.  Each rank computes a local predicate ("any
+non-finite value in my gradient shards?") and the global decision is its
+max-reduction over every mesh axis — ``AllReduce`` on the one-bit space
+``F^1``, an operator we already have, trivially self-adjoint on that
+space (Eq. 13 with n=1).  All ranks then agree: either every rank
+applies the optimizer update or every rank passes the old state through
+``jnp.where`` — control flow never diverges, no collective is ever
+conditional, and the whole thing stays inside the existing jit/dist_jit
+region (no second dispatch).
+
+Helpers here are trace-time utilities shared by ``train/step.py`` and
+``core/pipeline.py``:
+
+- :func:`nonfinite_count` — local (per-shard under shard_map, global
+  under GSPMD) count of non-finite values in a pytree.
+- :func:`nonfinite_flag` — the one-bit form of the count.
+- :func:`tree_where` — the pass-through select: ``where(ok, new, old)``
+  leafwise.  A *select*, not an arithmetic blend — NaNs in the rejected
+  branch never propagate (``0 * nan`` would).
+- :func:`apply_guard` — the full skip: params/optimizer state untouched,
+  ``skipped_steps`` incremented, step counter still advances (a skipped
+  step consumes its batch; the data stream is addressed by step).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["nonfinite_count", "nonfinite_flag", "tree_where", "apply_guard"]
+
+
+def nonfinite_count(tree) -> jax.Array:
+    """int32 count of non-finite values over every inexact leaf of ``tree``.
+
+    Inside a shard_map region this is the rank-LOCAL count (agree it with
+    one ``jax.lax.pmax``/``psum`` over the mesh — the one-bit AllReduce);
+    under GSPMD it is already the single global value every rank shares.
+    Integer/bool leaves are skipped (non-finiteness is a float concept).
+    """
+    cnt = jnp.zeros((), jnp.int32)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+            cnt = cnt + jnp.sum(~jnp.isfinite(leaf)).astype(jnp.int32)
+    return cnt
+
+
+def nonfinite_flag(tree) -> jax.Array:
+    """The one-bit form of :func:`nonfinite_count`: int32 0 or 1."""
+    return jnp.minimum(nonfinite_count(tree), 1)
+
+
+def tree_where(ok, new_tree, old_tree):
+    """Leafwise ``where(ok, new, old)`` — the pass-through update.
+
+    ``ok`` must be a (replicated) scalar predicate, identical on every
+    rank — under SPMD that means it came from the agreed one-bit
+    AllReduce, never from a rank-local value.  Select semantics guarantee
+    the rejected branch's NaNs do not leak into the kept one.
+    """
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(ok, n, o.astype(n.dtype)), new_tree, old_tree)
+
+
+def apply_guard(flag, state, new_params, new_opt):
+    """Assemble the guarded next train state from the agreed ``flag``.
+
+    ``flag`` is the globally-agreed one-bit non-finite indicator (0 =
+    clean step, 1 = skip).  On skip: ``params`` and every optimizer
+    moment are bitwise the previous state's (select, not blend), the
+    ``step`` counter still advances (the batch was consumed — stateless
+    data addressing stays aligned), and ``skipped_steps`` increments.
+    States produced before the counter existed default it to 0.
+    """
+    ok = flag == 0
+    skipped = state.get("skipped_steps", jnp.zeros((), jnp.int32))
+    return {
+        "params": tree_where(ok, new_params, state["params"]),
+        "opt": tree_where(ok, new_opt, state["opt"]),
+        "step": state["step"] + 1,
+        "skipped_steps": skipped + flag.astype(jnp.int32),
+    }

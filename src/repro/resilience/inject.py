@@ -1,0 +1,240 @@
+"""Deterministic fault injection for training-loop chaos tests (DESIGN §9).
+
+Faults at cluster scale — NaN bursts, preemptions, corrupt checkpoint
+shards, stragglers — are the steady state, so the recovery machinery must
+be testable on demand, deterministically.  A :class:`FaultPlan` is a
+seeded, declarative schedule of faults; :class:`FaultInjector` wraps a
+compiled train step and fires them at exact step numbers.
+
+Fire-once semantics live on the HOST, not in the compiled program: a
+step-number mask baked into the jitted step would re-fire every time the
+supervisor rolls back and replays the same step — precisely the replay on
+which the chaos test's exact-golden property rests.  So the injector keeps
+a spent-set and *chooses between two compiled variants*: the clean step
+and a poisoned sibling built with the same builder's ``fault_hook``
+(gradient poisoning must be compiled in — batches are integer token ids,
+so NaN cannot enter through the data).  Both variants are ordinary jitted
+functions; no recompile happens at fire time.
+
+Checkpoint corruption (:func:`corrupt_checkpoint`) models a torn write or
+bad disk sector: a seeded bit-flip or truncation of one array file,
+strictly past the npy header so the damage surfaces as a checksum
+mismatch (``CorruptCheckpointError``) on restore, not a parse error.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+class InjectedCrash(RuntimeError):
+    """A planned process 'crash' — recoverable by the supervisor."""
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Declarative, seeded schedule of training faults.
+
+    ``poison_grads_at``: steps whose gradients are NaN/Inf-poisoned (the
+    step runs the poisoned compiled variant; the SPMD guard should skip).
+    ``crash_at``: steps at which :class:`InjectedCrash` is raised *before*
+    the step runs (generalizes ``LoopConfig.fail_at_step``); with
+    ``corrupt_on_crash`` the newest checkpoint is damaged first — the
+    torn-write-at-preemption scenario.  ``slow_at``: steps delayed by
+    ``slow_seconds`` (straggler injection).  ``once=True`` (default) makes
+    every fault fire exactly once across restarts/replays; ``once=False``
+    re-fires on every pass over the step (persistent data poison — the
+    NaN-streak rollback scenario).
+    """
+    seed: int = 0
+    poison_grads_at: tuple = ()
+    poison_value: float = float("nan")
+    crash_at: tuple = ()
+    corrupt_on_crash: bool = False
+    corrupt_mode: str = "bitflip"          # or "truncate"
+    corrupt_array: str | None = None       # key substring; default: a params leaf
+    slow_at: tuple = ()
+    slow_seconds: float = 0.0
+    once: bool = True
+
+    @staticmethod
+    def parse(spec: str) -> "FaultPlan":
+        """Parse the ``--fault-plan`` CLI syntax.
+
+        Comma-separated ``key=value`` tokens; multiple steps join with
+        ``+``.  Example: ``poison=3+4,crash=9,corrupt=bitflip,slow=4:0.2,
+        seed=1,persistent``.  Keys: ``poison`` (grad-poison steps),
+        ``value`` (poison value: ``nan``/``inf``/float), ``crash``,
+        ``corrupt`` (bitflip|truncate — implies corrupt-on-crash),
+        ``array`` (corrupt-target key substring), ``slow`` (
+        ``step:seconds``), ``seed``, ``persistent`` (faults re-fire).
+        """
+        kw: dict = {}
+        for tok in filter(None, (t.strip() for t in spec.split(","))):
+            if tok == "persistent":
+                kw["once"] = False
+                continue
+            if "=" not in tok:
+                raise ValueError(f"bad fault-plan token {tok!r}")
+            k, v = tok.split("=", 1)
+            if k == "poison":
+                kw["poison_grads_at"] = tuple(int(s) for s in v.split("+"))
+            elif k == "value":
+                kw["poison_value"] = float(v)
+            elif k == "crash":
+                kw["crash_at"] = tuple(int(s) for s in v.split("+"))
+            elif k == "corrupt":
+                if v not in ("bitflip", "truncate"):
+                    raise ValueError(f"corrupt mode {v!r} not bitflip|truncate")
+                kw["corrupt_on_crash"] = True
+                kw["corrupt_mode"] = v
+            elif k == "array":
+                kw["corrupt_array"] = v
+            elif k == "slow":
+                step, _, sec = v.partition(":")
+                kw["slow_at"] = tuple(int(s) for s in step.split("+"))
+                kw["slow_seconds"] = float(sec) if sec else 0.1
+            elif k == "seed":
+                kw["seed"] = int(v)
+            else:
+                raise ValueError(f"unknown fault-plan key {k!r}")
+        return FaultPlan(**kw)
+
+
+def nan_grad_hook(value: float = float("nan")):
+    """A traceable ``grads -> grads`` poisoning one gradient element.
+
+    Sets element 0 of the first leaf to ``value`` — the minimal realistic
+    burst: ONE bad value in ONE shard, which the one-bit AllReduce must
+    still surface on every rank.  Pass as ``fault_hook=`` to a step
+    builder to get the poisoned compiled variant.
+    """
+    def hook(grads):
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        first = leaves[0]
+        poisoned = first.ravel().at[0].set(
+            jnp.asarray(value, first.dtype)).reshape(first.shape)
+        return jax.tree_util.tree_unflatten(treedef, [poisoned] + leaves[1:])
+    return hook
+
+
+def poison_batch(batch, value: float = float("nan")):
+    """Host-side batch poisoner: sets element 0 of every FLOAT leaf.
+
+    Token-id batches (integer leaves) have nowhere to hold a NaN — for
+    those, inject at the gradient tree via :func:`nan_grad_hook` instead.
+    Returns ``(batch, n_poisoned_leaves)``.
+    """
+    import numpy as np
+    n = 0
+
+    def leaf(a):
+        nonlocal n
+        a = np.asarray(a)
+        if not np.issubdtype(a.dtype, np.floating):
+            return a
+        a = a.copy()
+        a.ravel()[0] = value
+        n += 1
+        return a
+
+    out = jax.tree_util.tree_map(leaf, batch)
+    return out, n
+
+
+def corrupt_checkpoint(ckpt_dir: str, step: int | None = None, *,
+                       array: str | None = None, mode: str = "bitflip",
+                       seed: int = 0) -> str:
+    """Damage one array file of a finalized checkpoint; returns its path.
+
+    ``step=None`` targets the newest checkpoint; ``array`` selects the
+    first manifest leaf whose key contains it (default: the first
+    ``params`` leaf).  ``bitflip`` flips one seeded byte strictly past the
+    npy header; ``truncate`` halves the file.  Either way ``restore``'s
+    per-array checksum catches it (``CorruptCheckpointError``) — this
+    models a torn write / bad sector, not a missing manifest.
+    """
+    from repro.checkpoint import ckpt as ckpt_lib
+    if step is None:
+        step = ckpt_lib.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    want = array if array is not None else "params"
+    entry = next((e for e in manifest["leaves"] if want in e["key"]),
+                 manifest["leaves"][0])
+    fpath = os.path.join(path, entry["file"])
+    size = os.path.getsize(fpath)
+    if mode == "truncate":
+        with open(fpath, "r+b") as f:
+            f.truncate(size // 2)
+    elif mode == "bitflip":
+        # stay past the npy header block (128-byte aligned) so the damage
+        # is silent at parse time and only the checksum can see it
+        lo = min(256, size - 1)
+        pos = random.Random(seed).randrange(lo, size)
+        with open(fpath, "r+b") as f:
+            f.seek(pos)
+            b = f.read(1)
+            f.seek(pos)
+            f.write(bytes([b[0] ^ 0x40]))
+    else:
+        raise ValueError(f"corrupt mode {mode!r} not bitflip|truncate")
+    return fpath
+
+
+@dataclass
+class FaultInjector:
+    """Host-side wrapper turning a :class:`FaultPlan` into live faults.
+
+    Callable as a train step: ``injector(state, batch)``.  Reads the step
+    number from ``state['step']`` (host transfer of one scalar), consults
+    the plan, and either sleeps (slow), raises :class:`InjectedCrash`
+    (optionally corrupting the newest checkpoint first), or dispatches
+    the poisoned compiled variant instead of the clean one.  The
+    spent-set lives here so replays after rollback run clean — share ONE
+    injector instance across supervisor restarts.
+    """
+    plan: FaultPlan
+    step_fn: object
+    poisoned_step_fn: object | None = None
+    ckpt_dir: str | None = None
+    _spent: set = field(default_factory=set)
+
+    def _fires(self, kind: str, step: int, at: tuple) -> bool:
+        if step not in at:
+            return False
+        if self.plan.once:
+            if (kind, step) in self._spent:
+                return False
+            self._spent.add((kind, step))
+        return True
+
+    def __call__(self, state, batch):
+        step = int(jax.device_get(state["step"]))
+        if self._fires("slow", step, self.plan.slow_at):
+            time.sleep(self.plan.slow_seconds)
+        if self._fires("crash", step, self.plan.crash_at):
+            if self.plan.corrupt_on_crash and self.ckpt_dir:
+                from repro.checkpoint import ckpt as ckpt_lib
+                ckpt_lib.wait_pending()      # corrupt a FINALIZED checkpoint
+                corrupt_checkpoint(self.ckpt_dir, array=self.plan.corrupt_array,
+                                   mode=self.plan.corrupt_mode,
+                                   seed=self.plan.seed)
+            raise InjectedCrash(f"injected crash at step {step}")
+        if self._fires("poison", step, self.plan.poison_grads_at):
+            if self.poisoned_step_fn is None:
+                raise ValueError(
+                    "FaultPlan poisons gradients but no poisoned_step_fn was "
+                    "built (pass fault_hook=nan_grad_hook(...) to the builder)")
+            return self.poisoned_step_fn(state, batch)
+        return self.step_fn(state, batch)

@@ -1,4 +1,12 @@
-from .loop import LoopConfig, StragglerMonitor, restart_on_failure, run  # noqa: F401
+from .loop import (  # noqa: F401
+    History,
+    LoopConfig,
+    NonFiniteStreakError,
+    RECOVERABLE,
+    StragglerMonitor,
+    restart_on_failure,
+    run,
+)
 from .step import (  # noqa: F401
     build_hybrid_train_step,
     build_hybrid_value_and_grad,

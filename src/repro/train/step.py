@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.models import forward
 from repro.optim.optimizers import global_norm
+from repro.resilience.guard import apply_guard, nonfinite_flag
 
 
 def cross_entropy(logits, labels, z_loss: float = 1e-4):
@@ -49,11 +50,24 @@ def build_loss_fn(cfg, policy, aux_weight: float = 0.01, use_flash=False):
 
 def build_train_step(cfg, policy, optimizer, *, aux_weight: float = 0.01,
                      max_grad_norm: float = 1.0, grad_compress: bool = False,
-                     use_flash: bool = False, accum_dtype=None):
+                     use_flash: bool = False, accum_dtype=None,
+                     nonfinite_guard: bool = True, fault_hook=None):
     """``accum_dtype``: dtype of the microbatch gradient accumulator.  For
     1T-param models the fp32 tree is itself a large fraction of HBM
     (16 GiB/chip for kimi-k2 on 256 chips); bf16 halves it at the cost of
-    accumulation rounding (§Perf iteration 4)."""
+    accumulation rounding (§Perf iteration 4).
+
+    ``nonfinite_guard`` (default on) fuses the SPMD-consistent skip into
+    the step (DESIGN §9): when loss or any gradient is non-finite the
+    optimizer update is passed through leafwise ``jnp.where`` — params and
+    moments bitwise unchanged, ``skipped_steps`` incremented, ``step``
+    still advanced (the batch was consumed).  This builder runs under
+    GSPMD (whole-array jit), where every computed scalar is already the
+    single global value on all ranks — the one-bit agreement needs no
+    explicit collective here; the shard_map executor path
+    (``build_hybrid_train_step``) is where it becomes a live ``pmax``.
+    ``fault_hook`` (traceable ``grads -> grads``) is the compiled-in
+    injection point for ``resilience/inject.py``."""
     loss_fn = build_loss_fn(cfg, policy, aux_weight, use_flash)
     accum = max(cfg.grad_accum, 1)
     if accum_dtype is None:
@@ -89,6 +103,8 @@ def build_train_step(cfg, policy, optimizer, *, aux_weight: float = 0.01,
             # wire-format compression for the DP all-reduce (unbiased bf16)
             grads = jax.tree_util.tree_map(
                 lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+        if fault_hook is not None:
+            grads = fault_hook(grads)
 
         # fold the clip scale into the optimizer's fp32 cast: no separate
         # clipped gradient tree is materialized (global_norm is a pure
@@ -97,9 +113,14 @@ def build_train_step(cfg, policy, optimizer, *, aux_weight: float = 0.01,
         scale = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-12))
         new_params, new_opt = optimizer.update(grads, state["opt"], params,
                                                scale=scale)
-        new_state = {"params": new_params, "opt": new_opt,
-                     "step": state["step"] + 1}
         metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        if nonfinite_guard:
+            flag = nonfinite_flag((loss, grads))
+            new_state = apply_guard(flag, state, new_params, new_opt)
+            metrics["skipped"] = flag
+        else:
+            new_state = {"params": new_params, "opt": new_opt,
+                         "step": state["step"] + 1}
         return new_state, metrics
 
     return train_step
@@ -107,7 +128,9 @@ def build_train_step(cfg, policy, optimizer, *, aux_weight: float = 0.01,
 
 def build_hybrid_value_and_grad(cfg, policy, *, num_microbatches: int,
                                 schedule: str = "1f1b",
-                                aux_weight: float = 0.01):
+                                aux_weight: float = 0.01,
+                                nonfinite_flag: bool = False,
+                                fault_hook=None):
     """The scheduled executor call of ``build_hybrid_train_step``, factored:
     ``(pvg, sched)`` where ``pvg(params, {"tokens": mbs}, label_mbs) ->
     (loss, grads)`` over microbatched ``(M, B/M, S)`` inputs — so tests can
@@ -161,6 +184,8 @@ def build_hybrid_value_and_grad(cfg, policy, *, num_microbatches: int,
         pre_psum_axes=(policy.model_axis,) if explicit else (),
         stage_psum_axes=stage_psum_axes,
         stage_aux=bool(cfg.num_experts),
+        nonfinite_flag=nonfinite_flag,
+        grad_fault_hook=fault_hook,
         jit=False)
     return pvg, sched
 
@@ -168,7 +193,8 @@ def build_hybrid_value_and_grad(cfg, policy, *, num_microbatches: int,
 def build_hybrid_train_step(cfg, policy, optimizer, *,
                             num_microbatches: int, schedule: str = "1f1b",
                             max_grad_norm: float = 1.0,
-                            aux_weight: float = 0.01):
+                            aux_weight: float = 0.01,
+                            nonfinite_guard: bool = True, fault_hook=None):
     """Train step over the hybrid DP x pipe x ctx x tensor x expert mesh
     (DESIGN §5-6, §8).
 
@@ -197,14 +223,26 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
     ``cfg.grad_accum`` is subsumed by ``num_microbatches``.  State params
     follow the {'pre','stage','post'} pipeline layout; clip + optimizer
     update match ``build_train_step``; metrics carry the schedule's static
-    bubble fraction.  Raises ``ValueError`` at trace time when the batch
+    bubble fraction.
+
+    ``nonfinite_guard`` (default on) fuses the SPMD-consistent skip
+    (DESIGN §9): the executor returns a one-bit non-finite flag agreed
+    over EVERY live mesh axis by a single max-AllReduce inside the same
+    shard_map region — a per-rank (divergent) decision would strand the
+    other ranks at the drain-tail psums, the deadlock the
+    divergent-collective lint rule rejects.  On flag=1 the update is a
+    leafwise ``jnp.where`` pass-through (params and moments bitwise
+    unchanged, ``skipped_steps`` incremented); no second dispatch either
+    way.  ``fault_hook`` compiles a gradient fault-injection point into
+    the region (``resilience/inject.py``).  Raises ``ValueError`` at trace time when the batch
     does not divide by microbatches x dp x ep, the sequence does not
     divide by cp (the ``BatchScatter`` contract), or the experts do not
     divide by ep (models/moe.py).  Wrap in jax.jit.
     """
     pvg, sched = build_hybrid_value_and_grad(
         cfg, policy, num_microbatches=num_microbatches, schedule=schedule,
-        aux_weight=aux_weight)
+        aux_weight=aux_weight, nonfinite_flag=nonfinite_guard,
+        fault_hook=fault_hook)
     bubble = sched.bubble_fraction()
     data_axis = policy.active_data_axis
     dp = policy.axis_size(data_axis) if data_axis else 1
@@ -225,15 +263,21 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
                 f"trailing positions")
         mbs = jax.tree_util.tree_map(
             lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
-        loss, grads = pvg(params, {"tokens": mbs["tokens"]}, mbs["labels"])
+        out = pvg(params, {"tokens": mbs["tokens"]}, mbs["labels"])
+        loss, grads = out[0], out[1]
         gnorm = global_norm(grads)
         scale = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-12))
         new_params, new_opt = optimizer.update(grads, state["opt"], params,
                                                scale=scale)
-        new_state = {"params": new_params, "opt": new_opt,
-                     "step": state["step"] + 1}
         metrics = {"loss": loss, "grad_norm": gnorm,
                    "bubble_fraction": jnp.asarray(bubble, jnp.float32)}
+        if nonfinite_guard:
+            flag = out[2]        # globally agreed inside the executor region
+            new_state = apply_guard(flag, state, new_params, new_opt)
+            metrics["skipped"] = flag
+        else:
+            new_state = {"params": new_params, "opt": new_opt,
+                         "step": state["step"] + 1}
         return new_state, metrics
 
     return train_step
@@ -241,7 +285,8 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
 
 def build_pipeline_train_step(cfg, policy, optimizer, *,
                               num_microbatches: int, schedule: str = "1f1b",
-                              max_grad_norm: float = 1.0):
+                              max_grad_norm: float = 1.0,
+                              nonfinite_guard: bool = True, fault_hook=None):
     """Train step over a pipeline-parallel model cut (core/pipeline.py).
 
     The loss and gradients come from the scheduled SPMD pipeline executor
@@ -261,9 +306,11 @@ def build_pipeline_train_step(cfg, policy, optimizer, *,
     """
     return build_hybrid_train_step(
         cfg, policy, optimizer, num_microbatches=num_microbatches,
-        schedule=schedule, max_grad_norm=max_grad_norm)
+        schedule=schedule, max_grad_norm=max_grad_norm,
+        nonfinite_guard=nonfinite_guard, fault_hook=fault_hook)
 
 
 def init_train_state(cfg, params, optimizer):
     return {"params": params, "opt": optimizer.init(params),
-            "step": jnp.zeros((), jnp.int32)}
+            "step": jnp.zeros((), jnp.int32),
+            "skipped_steps": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,140 @@
+"""Resilience on the live 5-D mesh (DESIGN §9).
+
+Two properties only the multi-device path can witness:
+
+1. The skip decision costs EXACTLY ONE extra all-reduce.  The guard's
+   one-bit agreement is a single ``pmax`` over every mesh axis; its max
+   combiner keeps it separate from the drain-tail add-psums, so the
+   guarded hybrid step's ``collective_inventory`` differs from the
+   unguarded one by one all-reduce and nothing else — and the guarded
+   program stays ``hlo_lint``-error-clean (no divergent collective, no
+   seq-dim all-gather).
+
+2. The chaos acceptance test: on the (dp, pp, cp, tp) = (2, 1, 2, 2)
+   hybrid mesh, under a fault plan combining a NaN-poisoned gradient
+   step, a crash, and bit-flip corruption of the newest checkpoint,
+   supervised training self-heals (skip -> crash -> quarantine +
+   fallback-restore -> replay) and the final fixed-seed fp32 loss — and
+   every parameter — EXACTLY matches the fault-free golden run.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ModelConfig
+from repro.launch.mesh import make_hybrid_mesh
+from repro.optim import make_optimizer
+from repro.models import init_pipeline_params
+from repro.sharding import Policy
+from repro.train import (LoopConfig, build_hybrid_train_step,
+                         init_train_state, restart_on_failure, run)
+from repro.resilience import FaultInjector, FaultPlan, nan_grad_hook
+
+CFG = ModelConfig(name="resil", family="dense", num_layers=4, d_model=64,
+                  num_heads=8, num_kv_heads=4, head_dim=8, d_ff=128,
+                  vocab_size=256, dtype="float32", remat=False, attn_chunk=16)
+TOTAL = 12
+
+
+def _need8():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+
+
+def _batch(i):
+    key = jax.random.fold_in(jax.random.PRNGKey(1), i)
+    return {"tokens": jax.random.randint(key, (16, 16), 0, CFG.vocab_size),
+            "labels": jax.random.randint(jax.random.fold_in(key, 1),
+                                         (16, 16), 0, CFG.vocab_size)}
+
+
+def _rig():
+    """(policy, opt, make_state) on the (2, 1, 2, 2) CP hybrid mesh."""
+    pol = Policy.for_mesh(make_hybrid_mesh(2, 1, 2, 2), explicit_tp=True)
+    opt = make_optimizer("adamw", total_steps=TOTAL)
+
+    def make_state():
+        params = init_pipeline_params(CFG, jax.random.PRNGKey(0),
+                                      pol.pipe_size)
+        return init_train_state(CFG, params, opt)
+
+    return pol, opt, make_state
+
+
+def test_guard_costs_one_allreduce_and_lints_clean():
+    """collective_inventory(guarded) - collective_inventory(unguarded) ==
+    {all-reduce: +1}; the guarded program has zero hlo_lint errors."""
+    _need8()
+    from repro.analysis.hlo_lint import format_findings, lint_hlo
+    from repro.roofline.hlo_profile import collective_inventory
+
+    pol, opt, make_state = _rig()
+    kw = dict(num_microbatches=4, schedule="1f1b")
+    guarded = jax.jit(build_hybrid_train_step(CFG, pol, opt, **kw))
+    unguarded = jax.jit(build_hybrid_train_step(CFG, pol, opt,
+                                                nonfinite_guard=False, **kw))
+    state, batch = make_state(), _batch(0)
+    hlo_g = guarded.lower(state, batch).compile().as_text()
+    hlo_u = unguarded.lower(state, batch).compile().as_text()
+
+    inv_g = {k: v[0] for k, v in collective_inventory(hlo_g).items()}
+    inv_u = {k: v[0] for k, v in collective_inventory(hlo_u).items()}
+    delta = {k: inv_g.get(k, 0) - inv_u.get(k, 0)
+             for k in set(inv_g) | set(inv_u)}
+    assert {k: v for k, v in delta.items() if v} == {"all-reduce": 1}, (
+        f"skip decision must cost exactly one extra all-reduce: "
+        f"guarded={inv_g} unguarded={inv_u}")
+
+    findings = lint_hlo(hlo_g, seq_len=16, ctx_live=True)
+    errors = [f for f in findings if f.severity == "error"]
+    assert not errors, format_findings(errors)
+
+
+@pytest.mark.slow
+def test_chaos_hybrid_self_heals_to_exact_golden(tmp_path):
+    """The acceptance chaos test (ISSUE 9): NaN poison at step 5 (guard
+    skips, all 8 ranks agreeing), crash at step 9 bit-flipping the newest
+    checkpoint (step 8 — which embeds the skip), quarantine + fallback to
+    step 4 (pre-poison), replay with injection spent.  Final fp32 loss
+    and all params EXACTLY equal the fault-free run."""
+    _need8()
+    pol, opt, make_state = _rig()
+    kw = dict(num_microbatches=4, schedule="1f1b")
+    step = jax.jit(build_hybrid_train_step(CFG, pol, opt, **kw))
+    poisoned = jax.jit(build_hybrid_train_step(CFG, pol, opt,
+                                               fault_hook=nan_grad_hook(),
+                                               **kw))
+
+    def make_iter(start):
+        class It:
+            def __init__(self, s):
+                self.s = s
+
+            def __next__(self):
+                s = self.s
+                self.s += 1
+                return s, _batch(s)
+        return It(start)
+
+    d = str(tmp_path / "ckpt")
+    plan = FaultPlan.parse("poison=5,crash=9,corrupt=bitflip")
+    inj = FaultInjector(plan, step, poisoned_step_fn=poisoned, ckpt_dir=d)
+    loop_cfg = LoopConfig(total_steps=TOTAL, ckpt_dir=d, ckpt_every=4,
+                          keep=5, log_every=1000)
+    state, hist = restart_on_failure(make_state, inj, make_iter, loop_cfg,
+                                     backoff_base=0.01,
+                                     logger=lambda *a: None)
+
+    golden, ghist = run(make_state(), step, make_iter(0),
+                        LoopConfig(total_steps=TOTAL, log_every=1000),
+                        logger=lambda *a: None)
+
+    assert hist[-1]["loss"] == ghist[-1]["loss"], "final fp32 loss must be EXACT"
+    for a, b in zip(jax.tree_util.tree_leaves(state["params"]),
+                    jax.tree_util.tree_leaves(golden["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(state["step"]) == TOTAL
+    assert hist.health["restarts"] == 1
+    assert hist.health["skipped_steps"] == 1
+    assert hist.health["quarantined_checkpoints"] == 1

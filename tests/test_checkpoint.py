@@ -1,4 +1,5 @@
-"""Checkpoint: roundtrip fidelity, elastic (mesh-changing) restore, async."""
+"""Checkpoint: roundtrip fidelity, elastic (mesh-changing) restore, async,
+checksum verification + corrupt-fallback (DESIGN §9)."""
 
 import os
 import subprocess
@@ -47,6 +48,91 @@ def test_shape_mismatch_rejected(tmp_path):
            "step": jax.ShapeDtypeStruct((), jnp.int32)}
     with pytest.raises(ValueError):
         ckpt_lib.restore(str(tmp_path), like=bad)
+
+
+def test_async_save_error_is_reraised(tmp_path):
+    """A failing background save must surface in wait_pending(), not
+    vanish into a daemon thread."""
+    ckpt_lib.wait_pending()            # drain earlier tests' saves
+    t = ckpt_lib.save_async(str(tmp_path / "f" / "\0bad"), 1, _state())
+    t.join()
+    with pytest.raises(Exception):
+        ckpt_lib.wait_pending()
+    ckpt_lib.wait_pending()            # errors are consumed, not sticky
+
+
+def test_async_pending_stays_bounded(tmp_path):
+    for i in range(8):
+        ckpt_lib.save_async(str(tmp_path), i, _state(), keep=2)
+    ckpt_lib.wait_pending()
+    ckpt_lib.save_async(str(tmp_path), 99, _state(), keep=2)
+    assert len(ckpt_lib._pending) <= 1   # finished threads were pruned
+    ckpt_lib.wait_pending()
+
+
+def test_checksum_detects_bitflip(tmp_path):
+    from repro.resilience import corrupt_checkpoint
+    s = _state(3)
+    ckpt_lib.save(str(tmp_path), 5, s)
+    corrupt_checkpoint(str(tmp_path), mode="bitflip", array="params")
+    with pytest.raises(ckpt_lib.CorruptCheckpointError):
+        ckpt_lib.restore(str(tmp_path), like=s)
+    with pytest.raises(ckpt_lib.CorruptCheckpointError):
+        ckpt_lib.restore(str(tmp_path))    # like=None path verifies too
+
+
+def test_truncated_array_detected(tmp_path):
+    from repro.resilience import corrupt_checkpoint
+    s = _state(4)
+    ckpt_lib.save(str(tmp_path), 5, s)
+    corrupt_checkpoint(str(tmp_path), mode="truncate", array="params")
+    with pytest.raises(ckpt_lib.CorruptCheckpointError):
+        ckpt_lib.restore(str(tmp_path), like=s)
+
+
+def test_restore_latest_verified_falls_back_and_quarantines(tmp_path):
+    from repro.resilience import corrupt_checkpoint
+    s = _state(5)
+    ckpt_lib.save(str(tmp_path), 1, s)
+    ckpt_lib.save(str(tmp_path), 2, s)
+    corrupt_checkpoint(str(tmp_path), step=2, mode="bitflip")
+    state, step, quarantined = ckpt_lib.restore_latest_verified(
+        str(tmp_path), like=s)
+    assert step == 1 and quarantined == [2]
+    entries = sorted(os.listdir(tmp_path))
+    assert entries == ["step_00000001", "step_00000002.corrupt"]
+    assert ckpt_lib.latest_step(str(tmp_path)) == 1   # quarantine invisible
+    # all corrupt -> None (cold start), never an exception
+    corrupt_checkpoint(str(tmp_path), step=1, mode="truncate")
+    assert ckpt_lib.restore_latest_verified(str(tmp_path), like=s) is None
+
+
+def test_manifestless_dir_skipped(tmp_path):
+    """A half-deleted step dir (gc/crash race) must not break discovery."""
+    s = _state(6)
+    ckpt_lib.save(str(tmp_path), 1, s)
+    os.makedirs(tmp_path / "step_00000009")          # no manifest inside
+    assert ckpt_lib.latest_step(str(tmp_path)) == 1
+    _, step = ckpt_lib.restore(str(tmp_path), like=s)
+    assert step == 1
+
+
+def test_unreadable_manifest_is_corrupt_not_crash(tmp_path):
+    s = _state(7)
+    ckpt_lib.save(str(tmp_path), 1, s)
+    with open(tmp_path / "step_00000001" / "manifest.json", "w") as f:
+        f.write("{not json")
+    with pytest.raises(ckpt_lib.CorruptCheckpointError):
+        ckpt_lib.restore(str(tmp_path), step=1, like=s)
+
+
+def test_dtype_mismatch_is_explicit_error(tmp_path):
+    """A saved fp32 leaf restored against a bf16 ``like`` used to astype
+    silently; now it is a ValueError."""
+    ckpt_lib.save(str(tmp_path), 1, {"w": jnp.ones((4,), jnp.float32)})
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        ckpt_lib.restore(str(tmp_path),
+                         like={"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)})
 
 
 ELASTIC_SCRIPT = r"""

@@ -82,6 +82,20 @@ def test_checkpoint_atomicity_keep_k(tmp_path):
     assert not any(e.endswith(".tmp") for e in entries)
 
 
+def test_history_health_counters(tmp_path):
+    """restart_on_failure returns a History whose .health carries the
+    structured counters across restarts (DESIGN §9)."""
+    make_state, step, make_iter, loop_cfg = _setup(tmp_path, total=12)
+    loop_cfg.fail_at_step = 9
+    _, hist = restart_on_failure(make_state, step, make_iter, loop_cfg,
+                                 backoff_base=0.01, logger=lambda *a: None)
+    assert hist.health["restarts"] == 1
+    assert hist.health["rollbacks"] == 0
+    assert hist.health["backoff_seconds"] > 0
+    # every executed step is in the shared history, restarts included
+    assert [h["step"] for h in hist] == list(range(9)) + list(range(8, 12))
+
+
 def test_straggler_monitor():
     m = StragglerMonitor(alpha=0.5, factor=1.5)
     assert not m.observe(1.0)
