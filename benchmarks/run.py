@@ -26,16 +26,20 @@
                    executor (where the skip decision is a live one-bit
                    pmax all-reduce), asserting bitwise-identical losses
                    and exactly one added all-reduce
+  repartition      elastic checkpoint reshard (DESIGN §10): per-leaf
+                   Repartition plan byte accounting (bytes moved vs the
+                   resident lower bound) and cross-mesh restore wall
+                   time, full (2, 4) mesh -> 4-device shrunk mesh
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
 writes the machine-readable perf artifact (per-row us + structured extras
 + mesh factorization + device kind) the CI multidevice job uploads as
-BENCH_9.json — the gateable perf trajectory; ``--lint`` additionally runs
+BENCH_10.json — the gateable perf trajectory; ``--lint`` additionally runs
 ``repro.analysis.hlo_lint`` over the compiled programs and attaches the
 structured findings to the rows (an error-severity finding in a CP program
 fails the bench).  Run:
   PYTHONPATH=src python -m benchmarks.run [--only adjoint_table,...] \
-      [--json BENCH_9.json] [--lint]
+      [--json BENCH_10.json] [--lint]
 (uses 8 host devices; sets XLA_FLAGS when unset)
 """
 
@@ -754,6 +758,64 @@ def bench_resilience_overhead():
          collective_delta=extra_ar)
 
 
+def bench_repartition():
+    """Elastic checkpoint reshard (DESIGN §10): a checkpoint saved on the
+    full (2, 4) mesh restored onto a 4-device shrunk mesh through the
+    per-leaf ``Repartition`` plans of ``checkpoint/ckpt.py``.  Reports
+    the planner's byte accounting — bytes materialized by each plan
+    against the per-leaf lower bound (the bytes that must be resident on
+    the target mesh after ANY correct repartition) — and the wall time of
+    the verified cross-mesh restore (crc32 in the source layout + sharded
+    ``device_put`` landing).  The restored leaves are asserted globally
+    EQUAL to the saved ones first: a re-layout fixes the global value."""
+    import tempfile
+
+    from jax.sharding import NamedSharding
+    from repro.checkpoint import ckpt as ckpt_lib
+
+    src_mesh = mesh2d()                              # (2, 4) data x model
+    dst_mesh = compat.make_mesh((4,), ("model",), jax.devices()[:4])
+    key = jax.random.PRNGKey(0)
+
+    def place(spec, shape, i):
+        return jax.device_put(
+            jax.random.normal(jax.random.fold_in(key, i), shape),
+            NamedSharding(src_mesh, spec))
+
+    state = {"w_in": place(P(None, "model"), (256, 512), 0),
+             "w_out": place(P("model", None), (512, 256), 1),
+             "embed": place(P("data", None), (128, 256), 2),   # cross-axis
+             "bias": place(P(), (512,), 3)}
+    d = tempfile.mkdtemp()
+    ckpt_lib.save(d, 1, state)
+    shardings = {"w_in": NamedSharding(dst_mesh, P(None, "model")),
+                 "w_out": NamedSharding(dst_mesh, P("model", None)),
+                 "embed": NamedSharding(dst_mesh, P("model", None)),
+                 "bias": NamedSharding(dst_mesh, P())}
+
+    plans = ckpt_lib.plan_reshard(d, shardings)
+    moved = sum(p.bytes_moved for p in plans)
+    lower = sum(p.bytes_lower for p in plans)
+
+    restored, got = ckpt_lib.restore_resharded(d, shardings)
+    assert got == 1
+    for k in state:
+        np.testing.assert_array_equal(np.asarray(restored[k]),
+                                      np.asarray(state[k]), err_msg=k)
+    us = timeit(lambda: ckpt_lib.restore_resharded(d, shardings),
+                iters=5, warmup=1)
+    emit("repartition/reshard_2x4_to_4", us,
+         f"leaves={len(plans)};bytes_moved={moved};bytes_lower={lower};"
+         f"moved_over_lower={moved/lower:.2f}x",
+         mesh="2x4->4", bytes_moved=moved, bytes_lower=lower,
+         leaves=len(plans),
+         plans=[{"key": p.key,
+                 "src": p.src.describe() if p.src else "replicated",
+                 "dst": p.dst.describe() if p.dst else "replicated",
+                 "bytes_moved": p.bytes_moved,
+                 "bytes_lower": p.bytes_lower} for p in plans])
+
+
 BENCHES = {
     "adjoint_table": bench_adjoint_table,
     "lenet_equiv": bench_lenet_equiv,
@@ -768,6 +830,7 @@ BENCHES = {
     "moe_ep": bench_moe_ep,
     "train_micro": bench_train_micro,
     "resilience_overhead": bench_resilience_overhead,
+    "repartition": bench_repartition,
 }
 
 
@@ -776,7 +839,7 @@ def main():
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the machine-readable perf artifact "
-                         "(BENCH_9.json in CI)")
+                         "(BENCH_10.json in CI)")
     ap.add_argument("--lint", action="store_true",
                     help="run repro.analysis.hlo_lint over the compiled "
                          "programs and attach findings to the json rows "

@@ -60,6 +60,7 @@ TYPED_OPS = (
     linop.KVRingShift,
     linop.BatchScatter,
     linop.GradSumReduce,
+    linop.Repartition,
     linop.CapacityRestrict,
     linop.HaloExchange,
     linop.HaloAccumulate,
@@ -180,6 +181,7 @@ def candidate_moves(space: Space) -> list:
     if space.kind == "replicated":
         mv = [("identity", None), ("broadcast", None)]
         mv += [("batch_scatter", d) for d in range(rank)]
+        mv += [("repartition_in", d) for d in range(rank)]
         return mv + cap
     d = space.dim
     mv = []
@@ -190,6 +192,8 @@ def candidate_moves(space: Space) -> list:
     mv += [("grad_sum_reduce", None), ("all_gather", None),
            ("reduce_scatter", None)]
     mv += [("all_to_all", s) for s in range(rank) if s != d]
+    mv += [("repartition_out", None)]
+    mv += [("repartition_move", s) for s in range(rank) if s != d]
     mv += [("halo", w) for w in _HALO_WIDTHS]
     mv += [("halo_acc", w) for w in _HALO_WIDTHS]
     return mv
@@ -225,6 +229,12 @@ def move_op(axis: str, space: Space, move) -> LinearOp:
         return linop.HaloExchange(axis, d, *arg)
     if kind == "halo_acc":
         return linop.HaloAccumulate(axis, d, *arg)
+    if kind == "repartition_in":
+        return linop.Repartition(linop.Layout(None), linop.Layout(axis, arg))
+    if kind == "repartition_out":
+        return linop.Repartition(linop.Layout(axis, d), linop.Layout(None))
+    if kind == "repartition_move":
+        return linop.Repartition(linop.Layout(axis, d), linop.Layout(axis, arg))
     if kind == "cap_restrict":
         cd, keep = arg
         return linop.CapacityRestrict(cd, keep, space.local_shape[cd])
@@ -301,6 +311,15 @@ def exported_composites() -> list:
         ("pipe_boundary",
          pipeline.StageBoundary("pipe", -1) @ pipeline.StageBoundary("pipe", 1),
          sz, St("pipe", 0, (4, 3))),
+        # The elastic reshard path: a dp-sharded leaf re-homed onto the
+        # model axis and back (checkpoint/ckpt.py::restore_resharded) —
+        # cross-axis repartition through the replicated space, with the
+        # reverse repartition restoring the source layout.
+        ("elastic_reshard_roundtrip",
+         linop.Repartition(linop.Layout("model", 1), linop.Layout("data", 0))
+         @ linop.Repartition(linop.Layout("data", 0),
+                             linop.Layout("model", 1)),
+         sz, St("data", 0, (2, 16))),
     ]
 
 
@@ -350,6 +369,17 @@ def main() -> int:
         ("cap_keep_out_of_range",
          lambda: linop.CapacityRestrict(0, 7, 6),
          sz, None),
+        ("repartition_wrong_source_layout",
+         # the value is stacked over 'ctx' but the plan claims it starts
+         # replicated — the mistake restore_resharded's manifest check
+         # exists to catch
+         lambda: linop.Repartition(linop.Layout(None),
+                                   linop.Layout("model", 0)),
+         sz, Space.stacked("ctx", 0, (4, 3))),
+        ("repartition_dim_mismatch",
+         lambda: linop.Repartition(linop.Layout("model", 1),
+                                   linop.Layout("data", 0)),
+         sz, Space.stacked("model", 0, (2, 4))),
     ]
     for name, build, sizes, space in negatives:
         diag = _expect_reject(name, build, sizes, space)

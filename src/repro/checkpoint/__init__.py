@@ -1,10 +1,14 @@
 from . import ckpt  # noqa: F401
 from .ckpt import (  # noqa: F401
     CorruptCheckpointError,
+    LeafReshardPlan,
+    MeshMismatchError,
     latest_step,
+    plan_reshard,
     quarantine,
     restore,
     restore_latest_verified,
+    restore_resharded,
     save,
     save_async,
     wait_pending,

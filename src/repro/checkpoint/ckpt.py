@@ -18,10 +18,18 @@
   failures are captured and the first one re-raised by ``wait_pending()``
   — a failed background save is a loud event, not a silently missing
   checkpoint discovered at restore time.
-- **Mesh-agnostic (elastic)**: arrays are stored *logically* (full, host
-  numpy); ``restore`` re-shards onto whatever mesh/policy the restarted job
-  runs with — the elastic-scaling path (save on mesh A, restore on mesh B)
-  is tested in tests/test_checkpoint.py.
+- **Mesh-aware (elastic)**: arrays are stored *logically* (full, host
+  numpy) and the manifest records the save-time mesh factorization plus
+  each leaf's partition spec.  Restoring onto the SAME factorization is
+  ``restore``; restoring onto a *different* mesh (device loss, elastic
+  rescale) is :func:`restore_resharded`, which verifies every crc32 in the
+  source layout and drives each leaf through an explicit
+  :class:`~repro.core.linop.Repartition` plan (source layout -> replicated
+  -> target layout — the paper §4 distributed transpose, Eq. 13-checked in
+  the operator algebra).  ``restore`` with shardings on a mesh whose
+  factorization differs from the manifest raises
+  :class:`MeshMismatchError` pointing there, instead of surfacing as late
+  shape/sharding errors.
 
 Layout:  <dir>/step_<n>/manifest.json + arr_<i>.npy
 """
@@ -34,15 +42,27 @@ import re
 import shutil
 import threading
 import zlib
+from dataclasses import dataclass
 
 import jax
 import numpy as np
+
+from repro.core import linop
 
 
 class CorruptCheckpointError(RuntimeError):
     """A checkpoint failed verification: checksum mismatch, unreadable
     array file, or unreadable manifest.  Recoverable — fall back to the
     previous intact checkpoint (``restore_latest_verified``)."""
+
+
+class MeshMismatchError(ValueError):
+    """A checkpoint saved under one mesh factorization was restored under
+    a different one through the plain path.  Deliberately a ValueError
+    (NOT in the supervisor's RECOVERABLE set): a restart cannot fix a
+    configuration disagreement — route the restore through
+    :func:`restore_resharded`, which carries each leaf across meshes on an
+    explicit Repartition plan."""
 
 
 _STEP_RE = re.compile(r"^step_(\d{8})$")
@@ -67,8 +87,57 @@ def _tree_paths(tree):
     return keys, [l for _, l in flat], treedef
 
 
-def save(ckpt_dir: str, step: int, state, keep: int = 3) -> str:
-    """Synchronous atomic save.  Returns the final checkpoint path."""
+def _leaf_spec(leaf):
+    """JSON-able partition spec of a leaf's NamedSharding, or None.
+
+    Entries are ``None`` / axis name / list of axis names — exactly the
+    shape of a ``PartitionSpec``; host numpy arrays (and single-device
+    arrays with non-named shardings) record None (replicated).
+    """
+    spec = getattr(getattr(leaf, "sharding", None), "spec", None)
+    if spec is None:
+        return None
+    ndim = getattr(leaf, "ndim", len(tuple(spec)))
+    entries = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    return [list(e) if isinstance(e, tuple) else e for e in entries]
+
+
+def _mesh_factorization(leaves) -> dict | None:
+    """``{axis: size}`` of the first leaf carrying a named mesh, else None.
+
+    Accepts arrays (``leaf.sharding.mesh``) AND bare ``NamedSharding``
+    leaves (``leaf.mesh`` — the shape of a ``shardings`` pytree).
+    """
+    for leaf in leaves:
+        shd = getattr(leaf, "sharding", leaf)
+        mesh = getattr(shd, "mesh", None)
+        shape = getattr(mesh, "shape", None)
+        if shape:
+            return {a: int(s) for a, s in dict(shape).items()}
+    return None
+
+
+def capture_layouts(state):
+    """Save-time layout snapshot: ``(mesh_factorization, per-leaf specs)``.
+
+    Called by :func:`save` automatically; ``save_async`` calls it BEFORE
+    the host snapshot (``device_get`` strips shardings), then threads the
+    result through.
+    """
+    _, leaves, _ = _tree_paths(state)
+    return _mesh_factorization(leaves), [_leaf_spec(l) for l in leaves]
+
+
+def save(ckpt_dir: str, step: int, state, keep: int = 3, *,
+         layouts=None) -> str:
+    """Synchronous atomic save.  Returns the final checkpoint path.
+
+    The manifest records the live mesh factorization and each leaf's
+    partition spec (``layouts`` overrides the capture — used by
+    ``save_async``, whose host snapshot has already dropped shardings), so
+    a later restore can detect a mesh change and build the per-leaf
+    Repartition plans without any caller-side bookkeeping.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -78,13 +147,16 @@ def save(ckpt_dir: str, step: int, state, keep: int = 3) -> str:
         os.makedirs(tmp)
 
         keys, leaves, _ = _tree_paths(state)
-        manifest = {"step": step, "leaves": []}
-        for i, (key, leaf) in enumerate(zip(keys, leaves)):
+        mesh_fact, specs = (capture_layouts(state) if layouts is None
+                            else layouts)
+        manifest = {"step": step, "mesh": mesh_fact, "leaves": []}
+        for i, (key, leaf, spec) in enumerate(zip(keys, leaves, specs)):
             arr = np.asarray(jax.device_get(leaf))
             np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
             manifest["leaves"].append(
                 {"key": key, "file": f"arr_{i}.npy", "shape": list(arr.shape),
-                 "dtype": str(arr.dtype), "crc32": zlib.crc32(arr.tobytes())})
+                 "dtype": str(arr.dtype), "crc32": zlib.crc32(arr.tobytes()),
+                 "spec": spec})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -107,12 +179,13 @@ def save_async(ckpt_dir: str, step: int, state, keep: int = 3):
     later as a mysteriously missing checkpoint.  Finished threads are
     pruned on every call, so ``_pending`` stays bounded over long runs.
     """
+    layouts = capture_layouts(state)   # before device_get strips shardings
     host_state = jax.tree_util.tree_map(
         lambda l: np.asarray(jax.device_get(l)), state)
 
     def target():
         try:
-            save(ckpt_dir, step, host_state, keep)
+            save(ckpt_dir, step, host_state, keep, layouts=layouts)
         except BaseException as e:        # noqa: BLE001 — re-raised in wait_pending
             with _pending_guard:
                 _async_errors.append(e)
@@ -181,10 +254,13 @@ def restore(ckpt_dir: str, step: int | None = None, like=None, shardings=None):
 
     ``like`` (a pytree of arrays/ShapeDtypeStructs) provides the tree
     structure; ``shardings`` (matching pytree of NamedSharding) re-shards
-    onto the CURRENT mesh — which may differ from the mesh that saved
-    (elastic restart).  Raises :class:`CorruptCheckpointError` when the
-    manifest or an array fails to load/verify, ``ValueError`` on a
-    shape OR dtype mismatch against ``like`` — a dtype mismatch used to
+    onto the CURRENT mesh — which must carry the SAME factorization the
+    checkpoint was saved under: restoring onto a different mesh through
+    this path raises :class:`MeshMismatchError` naming
+    :func:`restore_resharded` (the elastic path) instead of surfacing as
+    late shape/sharding errors.  Raises :class:`CorruptCheckpointError`
+    when the manifest or an array fails to load/verify, ``ValueError`` on
+    a shape OR dtype mismatch against ``like`` — a dtype mismatch used to
     silently ``astype`` (precision-destroying on e.g. fp32 moments saved
     from a run that kept them in bf16); now it is an explicit error.
     """
@@ -200,6 +276,16 @@ def restore(ckpt_dir: str, step: int | None = None, like=None, shardings=None):
         raise CorruptCheckpointError(
             f"unreadable manifest in {path}: {e}") from e
     by_key = {e["key"]: e for e in manifest["leaves"]}
+
+    saved_mesh = manifest.get("mesh")
+    live_mesh = (_mesh_factorization(jax.tree_util.tree_leaves(shardings))
+                 if shardings is not None else None)
+    if saved_mesh and live_mesh and saved_mesh != live_mesh:
+        raise MeshMismatchError(
+            f"checkpoint step {step} was saved under mesh factorization "
+            f"{saved_mesh} but the live mesh is {live_mesh} — plain restore "
+            f"cannot carry state across meshes; use restore_resharded(), "
+            f"which moves each leaf on an explicit Repartition plan")
 
     if like is None:
         # reconstruct a flat dict
@@ -228,6 +314,191 @@ def restore(ckpt_dir: str, step: int | None = None, like=None, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, loaded), step
 
 
+# ---------------------------------------------------------------------------
+# Cross-mesh restore: per-leaf Repartition plans (the elastic path).
+# ---------------------------------------------------------------------------
+
+def _single_axis_layout(spec) -> linop.Layout | None:
+    """The :class:`~repro.core.linop.Layout` a recorded spec denotes.
+
+    ``None``/all-None entries -> the replicated layout; exactly one named
+    axis at dim d -> stacked there.  Multi-axis specs have no single-axis
+    reading — return None and let the plan route through the replicated
+    space per axis (the stored array is full either way).
+    """
+    if spec is None:
+        return linop.Layout(None)
+    placed = [(d, a) for d, a in enumerate(spec) if a is not None]
+    if not placed:
+        return linop.Layout(None)
+    if len(placed) > 1 or not isinstance(placed[0][1], str):
+        return None
+    return linop.Layout(placed[0][1], placed[0][0])
+
+
+@dataclass(frozen=True)
+class LeafReshardPlan:
+    """One leaf's movement plan for a cross-mesh restore.
+
+    ``gather`` is the source-side leg ``Repartition(src -> replicated)``
+    (materialized at save time: the stored array IS the full global
+    array), ``scatter`` the target-side leg ``Repartition(replicated ->
+    dst)`` realized by the sharded ``device_put``.  Routing through the
+    replicated space is what makes ANY (src mesh, dst mesh) pair legal —
+    including meshes that share no axis sizes.  ``bytes_moved`` counts the
+    bytes this plan materializes (full array off disk + resident target
+    shards); ``bytes_lower`` is the per-leaf lower bound — the bytes that
+    must be resident on the target mesh after ANY correct repartition.
+    """
+
+    key: str
+    src: linop.Layout | None
+    dst: linop.Layout | None
+    gather: linop.LinearOp
+    scatter: linop.LinearOp
+    global_shape: tuple
+    bytes_moved: int
+    bytes_lower: int
+
+
+def _spec_of_sharding(shd, ndim: int):
+    """Normalized spec entries of a NamedSharding, or None (replicated)."""
+    spec = getattr(shd, "spec", None)
+    if spec is None:
+        return None
+    entries = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    return [list(e) if isinstance(e, tuple) else e for e in entries]
+
+
+def _plan_leaf(key, spec, shd, shape, dtype) -> LeafReshardPlan:
+    """One leaf's plan from its recorded spec onto a target sharding."""
+    src = _single_axis_layout(spec)
+    dst_spec = _spec_of_sharding(shd, len(shape))
+    dst = _single_axis_layout(dst_spec)
+    gather = (linop.Repartition(src, linop.Layout(None))
+              if src is not None else linop.Identity())
+    scatter = (linop.Repartition(linop.Layout(None), dst)
+               if dst is not None else linop.Identity())
+    nbytes = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+    # Lower bound: the bytes that must be RESIDENT on the target mesh
+    # after any correct repartition — each device holds 1/k of the array
+    # under a stacked layout, a disjoint block under a multi-axis spec,
+    # all of it when replicated.
+    mesh = getattr(shd, "mesh", None)
+    sizes = ({a: int(s) for a, s in dict(mesh.shape).items()}
+             if mesh is not None else {})
+    n_dev = int(np.prod(list(sizes.values()) or [1]))
+    if dst is not None and dst.axis is not None:
+        lower = nbytes * n_dev // sizes[dst.axis]
+    elif dst_spec is not None and any(e is not None for e in dst_spec):
+        lower = nbytes
+    else:
+        lower = nbytes * n_dev
+    return LeafReshardPlan(key=key, src=src, dst=dst, gather=gather,
+                           scatter=scatter, global_shape=tuple(shape),
+                           bytes_moved=nbytes + lower, bytes_lower=lower)
+
+
+def _read_manifest(ckpt_dir: str, step: int | None):
+    """(manifest, step, path), resolving ``step=None`` to the newest."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"unreadable manifest in {path}: {e}") from e
+    return manifest, step, path
+
+
+def plan_reshard(ckpt_dir: str, shardings=None, step: int | None = None,
+                 like=None) -> list[LeafReshardPlan]:
+    """Per-leaf Repartition plans for restoring onto ``shardings``.
+
+    Pure planning — reads only the manifest (no array bytes), typechecks
+    each leg's space signature (the gather leg under the SOURCE mesh
+    sizes, the scatter leg under the TARGET's: same-named axes may differ
+    in size across a shrink, so the legs never share one axis_sizes
+    mapping), and returns the plans with byte accounting — what the
+    ``repartition`` benchmark row reports.  ``shardings=None`` plans a
+    replicated landing (every ``dst`` is the replicated layout).
+    """
+    manifest, step, _ = _read_manifest(ckpt_dir, step)
+    src_sizes = manifest.get("mesh") or {}
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+    if shardings is not None:
+        keys, shd_leaves, _ = _tree_paths(shardings)
+    elif like is not None:
+        keys, leaves, _ = _tree_paths(like)
+        shd_leaves = [None] * len(leaves)
+    else:
+        keys = [e["key"] for e in manifest["leaves"]]
+        shd_leaves = [None] * len(keys)
+    plans = []
+    for key, shd in zip(keys, shd_leaves):
+        entry = by_key.get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        plan = _plan_leaf(key, entry.get("spec"), shd, entry["shape"],
+                          entry["dtype"])
+        if plan.src is not None and plan.src.axis is not None:
+            k = int(src_sizes.get(plan.src.axis, 1))
+            local = list(plan.global_shape)
+            local[plan.src.dim] //= k
+            mid = plan.gather.space_map(
+                linop.Space.stacked(plan.src.axis, plan.src.dim, local),
+                {plan.src.axis: k})
+        else:
+            mid = linop.Space.replicated(plan.global_shape)
+        if plan.dst is not None and plan.dst.axis is not None:
+            dst_sizes = {a: int(s)
+                         for a, s in dict(shd.mesh.shape).items()}
+            plan.scatter.space_map(mid, dst_sizes)
+        plans.append(plan)
+    return plans
+
+
+def restore_resharded(ckpt_dir: str, shardings=None, step: int | None = None,
+                      like=None):
+    """Cross-mesh restore: verify in the source layout, Repartition out.
+
+    The elastic path (ISSUE 10): ``shardings`` is a pytree of
+    ``NamedSharding`` on the TARGET mesh — any factorization, any device
+    count, no relation to the save-time mesh required (``None`` lands
+    every leaf replicated, with ``like`` providing the tree structure).
+    Every array is crc32-verified as stored (the source layout's global
+    bytes), then driven through its :class:`LeafReshardPlan`: the gather
+    leg was materialized at save time (arrays are stored full — the
+    restriction adjoints' global lift is the identity), the scatter leg
+    lands the leaf as target-mesh shards.  Returns ``(state, step)`` like
+    :func:`restore`.
+    """
+    manifest, step, path = _read_manifest(ckpt_dir, step)
+    plans = plan_reshard(ckpt_dir, shardings, step, like)
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+    tree = shardings if shardings is not None else like
+    if tree is not None:
+        keys, tree_leaves, treedef = _tree_paths(tree)
+        shd_leaves = (tree_leaves if shardings is not None
+                      else [None] * len(tree_leaves))
+    else:
+        keys = [p.key for p in plans]
+        shd_leaves, treedef = [None] * len(keys), None
+    loaded = []
+    for plan, shd in zip(plans, shd_leaves):
+        entry = by_key[plan.key]
+        arr = _load_verified(path, entry)   # crc32 in the source layout
+        loaded.append(jax.device_put(arr, shd) if shd is not None
+                      else jax.device_put(arr))
+    if treedef is None:
+        return dict(zip(keys, loaded)), step
+    return jax.tree_util.tree_unflatten(treedef, loaded), step
+
+
 def quarantine(ckpt_dir: str, step: int) -> str:
     """Rename a bad checkpoint dir out of the restorable namespace.
 
@@ -246,20 +517,29 @@ def quarantine(ckpt_dir: str, step: int) -> str:
 
 
 def restore_latest_verified(ckpt_dir: str, like=None, shardings=None, *,
-                            quarantine_bad: bool = True, logger=None):
+                            quarantine_bad: bool = True, logger=None,
+                            reshard: bool = False):
     """Restore the newest checkpoint that passes verification.
 
     Walks finalized checkpoints newest-first; on
     :class:`CorruptCheckpointError` the bad dir is quarantined as
     ``.corrupt`` (when ``quarantine_bad``) and the previous one is tried —
-    the DESIGN §9 fallback path.  Returns ``(state, step, quarantined)``
-    with ``quarantined`` the list of quarantined step numbers, or ``None``
-    when no intact checkpoint exists (cold start).
+    the DESIGN §9 fallback path.  ``reshard=True`` routes each candidate
+    through :func:`restore_resharded` (the elastic supervisor's path: the
+    newest VERIFIED checkpoint, carried onto a different mesh).  Returns
+    ``(state, step, quarantined)`` with ``quarantined`` the list of
+    quarantined step numbers, or ``None`` when no intact checkpoint exists
+    (cold start).
     """
     quarantined: list[int] = []
     for step in reversed(_intact_steps(ckpt_dir)):
         try:
-            state, got = restore(ckpt_dir, step, like=like, shardings=shardings)
+            if reshard:
+                state, got = restore_resharded(ckpt_dir, shardings, step,
+                                               like=like)
+            else:
+                state, got = restore(ckpt_dir, step, like=like,
+                                     shardings=shardings)
             return state, got, quarantined
         except CorruptCheckpointError as e:
             if logger:

@@ -17,6 +17,7 @@ checker cannot infer (see DESIGN.md §2).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 __all__ = ["shard_map", "axis_size", "make_mesh"]
 
@@ -48,10 +49,21 @@ else:
         return jax.lax.psum(1, axis_name)
 
 
-def make_mesh(axis_shapes, axis_names):
-    """jax.make_mesh with Auto axis types where the kwarg exists."""
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """jax.make_mesh with Auto axis types where the kwarg exists.
+
+    ``devices`` restricts the mesh to an explicit device subset (the
+    elastic mesh-shrink path builds degraded meshes over the survivors of
+    a simulated device loss); None keeps jax's default device assignment.
+    """
     if hasattr(jax.sharding, "AxisType"):
+        kw = {"devices": devices} if devices is not None else {}
         return jax.make_mesh(
             tuple(axis_shapes), tuple(axis_names),
-            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)))
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)),
+            **kw)
+    if devices is not None:
+        return jax.sharding.Mesh(
+            np.asarray(devices).reshape(tuple(axis_shapes)),
+            tuple(axis_names))
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))

@@ -77,6 +77,8 @@ __all__ = [
     "KVRingShift",
     "BatchScatter",
     "GradSumReduce",
+    "Layout",
+    "Repartition",
     "CapacityRestrict",
     "HaloExchange",
     "HaloAccumulate",
@@ -696,6 +698,133 @@ class GradSumReduce(LinearOp):
 
     def out_spec(self, rank):
         return P()
+
+
+@dataclass(frozen=True)
+class Layout:
+    """Where a global tensor lives: ``axis is None`` means replicated over
+    the mesh (the F^n view); otherwise stacked over mesh ``axis`` along
+    tensor ``dim`` (the F^{kn} view).  The replicated layout normalizes
+    ``dim`` to 0 so :class:`Repartition` adjoints compare structurally
+    (``Repartition(a, b).T.T == Repartition(a, b)`` is an actual ``==``).
+
+    >>> Layout(None, 3) == Layout(None, 0)
+    True
+    >>> Layout("data", 1).axis, Layout("data", 1).dim
+    ('data', 1)
+    """
+
+    axis: str | None = None
+    dim: int = 0
+
+    def __post_init__(self):
+        if self.axis is None:
+            object.__setattr__(self, "dim", 0)
+        elif self.dim < 0:
+            raise SpaceTypeError(
+                f"Layout dim must be non-negative, got {self.dim}")
+
+    def describe(self) -> str:
+        """Human-readable form used in repartition-plan diagnostics."""
+        if self.axis is None:
+            return "replicated"
+        return f"stacked over '{self.axis}' at dim {self.dim}"
+
+
+@dataclass(frozen=True)
+class Repartition(LinearOp):
+    """T: general partition-to-partition movement (paper §4, DistDL's
+    distributed transpose) — the ONE operator that carries a tensor from
+    any :class:`Layout` to any other while fixing the global value.
+
+    Realized as a composition of the existing pieces, chosen by the
+    (src, dst) layout pair:
+
+    - same layout                      -> ``Identity``
+    - replicated -> stacked(a, d)      -> ``BatchScatter(a, d)``
+    - stacked(a, d) -> replicated      -> ``GradSumReduce(a, d)``
+    - stacked(a, d1) -> stacked(a, d2) -> ``AllToAll(a, d2, d1)``
+    - stacked(a, d1) -> stacked(b, d2) -> ``BatchScatter(b, d2)``
+                                          after ``GradSumReduce(a, d1)``
+                                          (through the replicated space)
+
+    Every piece is globally the identity map on the inclusive-memory view,
+    so T is a pure re-layout: same global vector, different partition.
+    Adjoint: the REVERSE repartition ``Repartition(dst, src)`` — each
+    piece's registered adjoint is exactly the piece of the reverse path,
+    so ``(T)* = T^{-1}`` here (re-layouts are orthogonal maps).  The
+    elastic checkpoint reshard (``checkpoint/ckpt.py::restore_resharded``)
+    drives every leaf through one of these plans.
+
+    >>> Repartition(Layout("data"), Layout("model", 1)).T == Repartition(
+    ...     Layout("model", 1), Layout("data"))
+    True
+    >>> Repartition(Layout(None), Layout("data")).T.T == Repartition(
+    ...     Layout(None), Layout("data"))
+    True
+    >>> Repartition(Layout("ep", 1), Layout("ep", 0)).pieces()
+    (AllToAll(axis='ep', split_dim=0, concat_dim=1),)
+    """
+
+    src: Layout
+    dst: Layout
+
+    @property
+    def DOMAIN_KIND(self):  # noqa: D102 — kind-signature protocol slot
+        return "replicated" if self.src.axis is None else "stacked"
+
+    @property
+    def CODOMAIN_KIND(self):  # noqa: D102 — kind-signature protocol slot
+        return "replicated" if self.dst.axis is None else "stacked"
+
+    def pieces(self) -> Tuple[LinearOp, ...]:
+        """The constituent ops in MATRIX-PRODUCT order (last applied
+        first), so ``Compose(self.pieces())`` is the equivalent chain."""
+        s, d = self.src, self.dst
+        if s == d:
+            return (Identity(),)
+        if s.axis is None:
+            return (BatchScatter(d.axis, d.dim),)
+        if d.axis is None:
+            return (GradSumReduce(s.axis, s.dim),)
+        if s.axis == d.axis:
+            return (AllToAll(s.axis, d.dim, s.dim),)
+        return (BatchScatter(d.axis, d.dim), GradSumReduce(s.axis, s.dim))
+
+    def __call__(self, x):
+        for op in reversed(self.pieces()):
+            x = op(x)
+        return x
+
+    def _adjoint(self):
+        # The adjoint of a re-layout is the reverse re-layout: each
+        # piece's adjoint is the corresponding piece of the reverse path.
+        return Repartition(self.dst, self.src)
+
+    def space_map(self, space, axis_sizes):
+        """Entry check against ``src``, then fold the pieces' signatures."""
+        s = self.src
+        if s.axis is None:
+            if space.kind != "replicated":
+                raise SpaceTypeError(
+                    f"{self!r} repartitions from the replicated layout, got "
+                    f"{space.describe()}")
+        elif (space.kind != "stacked" or space.axis != s.axis
+              or space.dim != s.dim):
+            raise SpaceTypeError(
+                f"{self!r} repartitions from {s.describe()}, got "
+                f"{space.describe()}")
+        for op in reversed(self.pieces()):
+            space = op.space_map(space, axis_sizes)
+        return space
+
+    def in_spec(self, rank):
+        s = self.src
+        return P() if s.axis is None else _axis_at(s.axis, s.dim, rank)
+
+    def out_spec(self, rank):
+        d = self.dst
+        return P() if d.axis is None else _axis_at(d.axis, d.dim, rank)
 
 
 @dataclass(frozen=True)

@@ -504,21 +504,36 @@ def pipeline_value_and_grad(pre_fn, stage_fn, post_fn, policy, schedule, *,
         # contributions — the DP gradient sum-reduce (Broadcast* =
         # SumReduce, Eq. 9) and its ctx/ep siblings (DESIGN §6, §8),
         # placed at the tail of the drain inside this same region.
+        # The DATA axis is reduced by its OWN psum, sequenced after the
+        # intra-replica reductions — never folded into the multi-axis
+        # all-reduce, whose internal association order is XLA's to choose.
+        # This makes the cross-replica sum an explicit node of the
+        # reduction tree: `psum_data(psum_rest(g))`.  Elastic recovery
+        # (DESIGN §10) depends on it — after a data-axis shrink the
+        # degraded step replays each lost replica's pass as a grad-
+        # accumulation pass and adds the per-pass `psum_rest` results on
+        # the host, which reproduces a two-party `psum_data` BITWISE
+        # (fp add is commutative; a 2-party reduction has a unique value).
         rep_axes = dp_axes + cx_axes + ep_axes
-        g_pre = psum_tree(carry["g_pre"],
-                          (pipe_axis,) + rep_axes + tuple(pre_psum_axes))
-        g_post = psum_tree(carry["g_post"],
-                           (pipe_axis,) + rep_axes + tuple(post_psum_axes))
+        def psum_split(tree, axes):
+            axes = tuple(a for a in axes if a not in dp_axes)
+            if axes:
+                tree = psum_tree(tree, axes)
+            return psum_tree(tree, dp_axes) if dp_axes else tree
+        g_pre = psum_split(carry["g_pre"],
+                           (pipe_axis,) + rep_axes + tuple(pre_psum_axes))
+        g_post = psum_split(carry["g_post"],
+                            (pipe_axis,) + rep_axes + tuple(post_psum_axes))
         if stage_psum_axes is not None:
             def _psum_leaf(path, g):
                 axes = tuple(stage_psum_axes(path))
-                return jax.lax.psum(g, axes) if axes else g
+                return psum_split(g, axes) if axes else g
             g_stage = jax.tree_util.tree_map_with_path(_psum_leaf,
                                                        carry["g_stage"])
         else:
-            g_stage = (psum_tree(carry["g_stage"], rep_axes) if rep_axes
+            g_stage = (psum_split(carry["g_stage"], rep_axes) if rep_axes
                        else carry["g_stage"])
-        loss = jax.lax.psum(carry["loss"], (pipe_axis,) + rep_axes) * inv_m
+        loss = psum_split(carry["loss"], (pipe_axis,) + rep_axes) * inv_m
         scale = partial(jax.tree_util.tree_map, lambda g: g * inv_m)
         grads = {
             "pre": scale(g_pre),

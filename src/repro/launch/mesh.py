@@ -11,6 +11,8 @@ jax device state (the dry-run sets XLA_FLAGS before first jax init).
 
 from __future__ import annotations
 
+import numpy as np
+
 from repro import compat
 
 
@@ -35,7 +37,7 @@ def make_pipeline_mesh(num_stages: int, tp: int = 1):
 
 
 def make_hybrid_mesh(dp: int, num_stages: int, cp: int = 1, tp: int = 1,
-                     ep: int = 1):
+                     ep: int = 1, *, devices=None):
     """Hybrid DP x pipe x ctx x tensor x expert mesh (DESIGN §5-6, §8):
     per-replica batch shards move along ``data`` (BatchScatter / gradient
     sum-reduce), stage boundaries along ``pipe``, KV ring-attention
@@ -56,12 +58,78 @@ def make_hybrid_mesh(dp: int, num_stages: int, cp: int = 1, tp: int = 1,
     PR 5 (was ``tp``, now ``cp``).  Pre-existing 3-argument positional
     callers MUST move to ``make_hybrid_mesh(dp, S, tp=...)`` — a stale
     call still factors the device count and silently trains a different
-    layout (ring attention, no TP).  Every in-repo caller is migrated."""
+    layout (ring attention, no TP).  Every in-repo caller is migrated.
+
+    ``devices`` pins the mesh to an explicit device subset (the elastic
+    path builds degraded meshes over the survivors of a device loss);
+    oversubscribing the available devices raises a clear ``ValueError``
+    naming the factorization — the exact error the elastic supervisor
+    probes while searching for the largest legal degraded mesh."""
+    import jax
+
+    avail = len(devices) if devices is not None else len(jax.devices())
+    want = dp * num_stages * cp * tp * ep
+    if want > avail:
+        raise ValueError(
+            f"hybrid mesh factorization dp*S*cp*tp*ep = "
+            f"{dp}x{num_stages}x{cp}x{tp}x{ep} = {want} oversubscribes the "
+            f"{avail} available device(s)")
     if ep == 1:
         if cp == 1:
             return compat.make_mesh((dp, num_stages, tp),
-                                    ("data", "pipe", "model"))
+                                    ("data", "pipe", "model"), devices)
         return compat.make_mesh((dp, num_stages, cp, tp),
-                                ("data", "pipe", "ctx", "model"))
+                                ("data", "pipe", "ctx", "model"), devices)
     return compat.make_mesh((dp, num_stages, cp, tp, ep),
-                            ("data", "pipe", "ctx", "model", "ep"))
+                            ("data", "pipe", "ctx", "model", "ep"), devices)
+
+
+def surviving_devices(mesh, lost_axis: str):
+    """The devices left after losing one slice of ``lost_axis``.
+
+    Simulated device loss (``resilience/inject.py``'s ``shrink`` fault
+    kind): the LAST slice along the lost axis goes away, survivors keep
+    their order — so the degraded mesh is a sub-grid of the original and
+    every surviving shard stays on the device that already holds it.
+    """
+    names = list(mesh.axis_names)
+    if lost_axis not in names:
+        raise ValueError(
+            f"mesh has no axis {lost_axis!r} (axes: {names})")
+    grid = np.asarray(mesh.devices)
+    ax = names.index(lost_axis)
+    if grid.shape[ax] <= 1:
+        raise ValueError(
+            f"axis {lost_axis!r} has size 1 — losing its only slice "
+            f"leaves no devices")
+    idx = [slice(None)] * grid.ndim
+    idx[ax] = slice(0, grid.shape[ax] - 1)
+    return list(grid[tuple(idx)].ravel())
+
+
+def shrink_factorization(factorization, lost_axis: str):
+    """The largest legal degraded (dp, S, cp, tp, ep) after losing one
+    slice of ``lost_axis``, plus the fold multiplier.
+
+    Halves (or generally shrinks to the largest remaining divisor...) the
+    lost axis' degree; the lost parallelism is folded into grad
+    accumulation (``virtual_dp`` for the data axis) so the global batch
+    schedule — and with it the fp32 loss — is unchanged.  Returns
+    ``((dp, S, cp, tp, ep), fold)`` where ``fold`` is old_degree //
+    new_degree.
+    """
+    axes = {"data": 0, "pipe": 1, "ctx": 2, "model": 3, "ep": 4}
+    if lost_axis not in axes:
+        raise ValueError(f"unknown mesh axis {lost_axis!r}")
+    fact = list(factorization)
+    i = axes[lost_axis]
+    old = fact[i]
+    if old <= 1:
+        raise ValueError(
+            f"axis {lost_axis!r} has degree {old} — nothing to shrink")
+    # largest degree that still divides the old one with a device short
+    new = old - 1
+    while old % new:
+        new -= 1
+    fact[i] = new
+    return tuple(fact), old // new

@@ -39,8 +39,8 @@ from repro.optim import make_optimizer
 from repro.resilience import FaultInjector, FaultPlan, nan_grad_hook
 from repro.sharding import Policy
 from repro.train import (LoopConfig, build_hybrid_train_step,
-                         build_train_step, init_train_state,
-                         restart_on_failure)
+                         build_train_step, elastic_restart_on_failure,
+                         init_train_state, restart_on_failure)
 
 
 def main():
@@ -83,6 +83,15 @@ def main():
                          "guard-skipped steps, roll back to the last good "
                          "checkpoint and advance the data stream past the "
                          "poisoned window")
+    ap.add_argument("--elastic", action="store_true",
+                    help="mesh-shrinking supervision (DESIGN §10): on a "
+                         "simulated device loss (fault-plan key "
+                         "'shrink=step:axis') shrink to the largest legal "
+                         "degraded factorization, reshard the newest "
+                         "verified checkpoint through the Repartition "
+                         "plan, fold lost data parallelism into grad "
+                         "accumulation (loss-exact), resume; requires "
+                         "--hybrid-mesh")
     ap.add_argument("--max-restarts", type=int, default=3)
     args = ap.parse_args()
 
@@ -126,6 +135,51 @@ def main():
                          base_lr=args.lr)
     cfg = dataclasses.replace(cfg, grad_accum=1)
     plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
+
+    def make_iter(start):
+        return PrefetchIterator(data, start_step=start)
+
+    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=args.ckpt_every, log_every=10,
+                          rollback_after_skips=args.rollback_after_skips)
+
+    if args.elastic:
+        if not hybrid:
+            raise SystemExit("--elastic requires --hybrid-mesh")
+        hook = nan_grad_hook(plan.poison_value) if plan is not None else None
+
+        def make_setup(fact, devices, vdp):
+            dp, pp, cp, tp, ep = fact
+            m = make_hybrid_mesh(dp, pp, cp, tp, ep, devices=devices)
+            pol = Policy.for_mesh(m, explicit_tp=tp > 1)
+            kw = dict(num_microbatches=args.microbatches,
+                      schedule=args.schedule, virtual_dp=vdp)
+            s = jax.jit(build_hybrid_train_step(cfg, pol, opt, **kw))
+            p = (jax.jit(build_hybrid_train_step(cfg, pol, opt,
+                                                 fault_hook=hook, **kw))
+                 if hook is not None else None)
+
+            def mk():
+                params = init_pipeline_params(
+                    cfg, jax.random.PRNGKey(args.seed), pol.pipe_size)
+                n = sum(l.size for l in jax.tree_util.tree_leaves(params))
+                print(f"{args.arch}: {n/1e6:.1f}M params, mesh={m.shape}, "
+                      f"virtual_dp={vdp}")
+                return init_train_state(cfg, params, opt)
+
+            return m, mk, s, p
+
+        injector = (FaultInjector(plan, None, ckpt_dir=args.ckpt_dir)
+                    if plan is not None else None)
+        state, hist = elastic_restart_on_failure(
+            make_setup, make_iter, loop_cfg, factorization=hybrid,
+            injector=injector, max_restarts=args.max_restarts)
+        health = " ".join(f"{k}={v:.2f}" if isinstance(v, float)
+                          else f"{k}={v}" for k, v in hist.health.items())
+        print(f"done: final loss {hist[-1]['loss']!r} over {len(hist)} "
+              f"steps  [{health}]")
+        return
+
     if hybrid:
         step = jax.jit(build_hybrid_train_step(
             cfg, policy, opt, num_microbatches=args.microbatches,
@@ -158,17 +212,11 @@ def main():
         print(f"{args.arch}: {n/1e6:.1f}M params, mesh={mesh.shape}")
         return init_train_state(cfg, params, opt)
 
-    def make_iter(start):
-        return PrefetchIterator(data, start_step=start)
-
-    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                          ckpt_every=args.ckpt_every, log_every=10,
-                          rollback_after_skips=args.rollback_after_skips)
     state, hist = restart_on_failure(make_state, step, make_iter, loop_cfg,
                                      max_restarts=args.max_restarts)
     health = " ".join(f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
                       for k, v in hist.health.items())
-    print(f"done: final loss {hist[-1]['loss']:.4f} over {len(hist)} steps  "
+    print(f"done: final loss {hist[-1]['loss']!r} over {len(hist)} steps  "
           f"[{health}]")
 
 

@@ -5,14 +5,16 @@ The skip decision is an AllReduce on the one-bit space — fault handling
 stays inside the single-dispatch region like every other operator.
 """
 
-from repro.resilience.guard import (apply_guard, nonfinite_count,
-                                    nonfinite_flag, tree_where)
-from repro.resilience.inject import (FaultInjector, FaultPlan, InjectedCrash,
+from repro.resilience.guard import (apply_guard, combine_flags,
+                                    nonfinite_count, nonfinite_flag,
+                                    tree_where)
+from repro.resilience.inject import (DeviceLossError, FaultInjector,
+                                     FaultPlan, InjectedCrash,
                                      corrupt_checkpoint, nan_grad_hook,
                                      poison_batch)
 
 __all__ = [
-    "apply_guard", "nonfinite_count", "nonfinite_flag", "tree_where",
-    "FaultInjector", "FaultPlan", "InjectedCrash", "corrupt_checkpoint",
-    "nan_grad_hook", "poison_batch",
+    "apply_guard", "combine_flags", "nonfinite_count", "nonfinite_flag",
+    "tree_where", "DeviceLossError", "FaultInjector", "FaultPlan",
+    "InjectedCrash", "corrupt_checkpoint", "nan_grad_hook", "poison_batch",
 ]

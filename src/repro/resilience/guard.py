@@ -38,7 +38,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["nonfinite_count", "nonfinite_flag", "tree_where", "apply_guard"]
+__all__ = ["nonfinite_count", "nonfinite_flag", "combine_flags",
+           "tree_where", "apply_guard"]
 
 
 def nonfinite_count(tree) -> jax.Array:
@@ -59,6 +60,22 @@ def nonfinite_count(tree) -> jax.Array:
 def nonfinite_flag(tree) -> jax.Array:
     """The one-bit form of :func:`nonfinite_count`: int32 0 or 1."""
     return jnp.minimum(nonfinite_count(tree), 1)
+
+
+def combine_flags(*flags) -> jax.Array:
+    """Max-combine per-pass one-bit flags (the host leg of the AllReduce).
+
+    After an elastic mesh shrink (DESIGN §10) the degraded step runs the
+    executor once per VIRTUAL replica; each pass returns its own agreed
+    flag.  The lost axis' contribution to the one-bit max-AllReduce is
+    replayed here — ``max`` is associative AND commutative, so the folded
+    decision is bit-identical to the full mesh's single pmax, in any
+    order.
+    """
+    out = flags[0]
+    for f in flags[1:]:
+        out = jnp.maximum(out, f)
+    return out
 
 
 def tree_where(ok, new_tree, old_tree):

@@ -38,6 +38,24 @@ class InjectedCrash(RuntimeError):
     """A planned process 'crash' — recoverable by the supervisor."""
 
 
+class DeviceLossError(RuntimeError):
+    """A simulated loss of one mesh-axis slice of devices (DESIGN §10).
+
+    Carries the mesh axis whose last slice 'died'.  A RuntimeError so the
+    plain supervisor treats it as recoverable-by-restart, but the ELASTIC
+    supervisor recognizes it specially: same devices never come back, so
+    it shrinks the mesh factorization (``launch/mesh.py``), reshards the
+    latest verified checkpoint (``restore_resharded``) and folds the lost
+    parallelism into grad accumulation (``virtual_dp``) before resuming.
+    """
+
+    def __init__(self, axis: str, step: int | None = None):
+        self.axis = axis
+        self.step = step
+        at = f" at step {step}" if step is not None else ""
+        super().__init__(f"injected device loss on mesh axis {axis!r}{at}")
+
+
 @dataclass(frozen=True)
 class FaultPlan:
     """Declarative, seeded schedule of training faults.
@@ -62,6 +80,7 @@ class FaultPlan:
     corrupt_array: str | None = None       # key substring; default: a params leaf
     slow_at: tuple = ()
     slow_seconds: float = 0.0
+    shrink_at: tuple = ()                  # ((step, axis), ...) device losses
     once: bool = True
 
     @staticmethod
@@ -74,7 +93,9 @@ class FaultPlan:
         ``value`` (poison value: ``nan``/``inf``/float), ``crash``,
         ``corrupt`` (bitflip|truncate — implies corrupt-on-crash),
         ``array`` (corrupt-target key substring), ``slow`` (
-        ``step:seconds``), ``seed``, ``persistent`` (faults re-fire).
+        ``step:seconds``), ``shrink`` (``step:axis`` — simulated loss of
+        one slice of that mesh axis, e.g. ``shrink=6:data``), ``seed``,
+        ``persistent`` (faults re-fire).
         """
         kw: dict = {}
         for tok in filter(None, (t.strip() for t in spec.split(","))):
@@ -101,6 +122,16 @@ class FaultPlan:
                 step, _, sec = v.partition(":")
                 kw["slow_at"] = tuple(int(s) for s in step.split("+"))
                 kw["slow_seconds"] = float(sec) if sec else 0.1
+            elif k == "shrink":
+                losses = []
+                for item in v.split("+"):
+                    step, _, axis = item.partition(":")
+                    if not axis:
+                        raise ValueError(
+                            f"shrink fault {item!r} needs step:axis "
+                            f"(e.g. shrink=6:data)")
+                    losses.append((int(step), axis))
+                kw["shrink_at"] = tuple(losses)
             elif k == "seed":
                 kw["seed"] = int(v)
             else:
@@ -219,10 +250,27 @@ class FaultInjector:
             self._spent.add((kind, step))
         return True
 
+    def rebind(self, step_fn, poisoned_step_fn=None):
+        """Swap in recompiled step variants, keeping the spent-set.
+
+        The elastic supervisor rebuilds the train step for the DEGRADED
+        mesh after a device loss; the injector must keep tracking which
+        faults already fired (fire-once across the reshard, like across a
+        restart), so the new compiled functions are bound in place rather
+        than wrapped in a fresh injector.
+        """
+        self.step_fn = step_fn
+        if poisoned_step_fn is not None:
+            self.poisoned_step_fn = poisoned_step_fn
+        return self
+
     def __call__(self, state, batch):
         step = int(jax.device_get(state["step"]))
         if self._fires("slow", step, self.plan.slow_at):
             time.sleep(self.plan.slow_seconds)
+        for at, axis in self.plan.shrink_at:
+            if step == at and self._fires(f"shrink:{axis}", step, (at,)):
+                raise DeviceLossError(axis, step)
         if self._fires("crash", step, self.plan.crash_at):
             if self.plan.corrupt_on_crash and self.ckpt_dir:
                 from repro.checkpoint import ckpt as ckpt_lib

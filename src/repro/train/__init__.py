@@ -4,6 +4,7 @@ from .loop import (  # noqa: F401
     NonFiniteStreakError,
     RECOVERABLE,
     StragglerMonitor,
+    elastic_restart_on_failure,
     restart_on_failure,
     run,
 )

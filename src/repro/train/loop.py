@@ -43,7 +43,7 @@ class History(list):
         super().__init__(*a)
         self.health = {"restarts": 0, "rollbacks": 0, "skipped_steps": 0,
                        "slow_steps": 0, "backoff_seconds": 0.0,
-                       "quarantined_checkpoints": 0}
+                       "quarantined_checkpoints": 0, "mesh_shrinks": 0}
 
 
 class NonFiniteStreakError(RuntimeError):
@@ -225,3 +225,96 @@ def _restart_point(loop_cfg: LoopConfig) -> int:
     if loop_cfg.ckpt_dir:
         return ckpt_lib.latest_step(loop_cfg.ckpt_dir) or 0
     return 0
+
+
+def elastic_restart_on_failure(make_setup, make_data_iter,
+                               loop_cfg: LoopConfig, *, factorization,
+                               injector=None, max_restarts: int = 3,
+                               recoverable=RECOVERABLE,
+                               backoff_base: float = 0.5,
+                               backoff_max: float = 30.0,
+                               backoff_jitter: float = 0.1, seed: int = 0,
+                               logger=print, sleep=time.sleep):
+    """Mesh-shrinking supervisor: survives the permanent loss of devices.
+
+    Extends :func:`restart_on_failure`'s restore-and-retry posture to
+    :class:`~repro.resilience.inject.DeviceLossError` — the fault a plain
+    restart cannot fix, because the lost devices never come back.  On a
+    device loss the supervisor instead (DESIGN §10):
+
+    1. drops the lost slice (``launch/mesh.surviving_devices``) and picks
+       the largest legal degraded factorization
+       (``launch/mesh.shrink_factorization``);
+    2. folds lost DATA parallelism into gradient accumulation
+       (``virtual_dp`` x= fold) so the global batch schedule — and, by the
+       explicit-reduction-tree construction in core/pipeline.py, the fp32
+       loss and every gradient — is BITWISE unchanged;
+    3. rebuilds mesh/state/step via ``make_setup`` (rebinding a shared
+       :class:`~repro.resilience.inject.FaultInjector` so fire-once faults
+       stay spent), reshards the newest VERIFIED checkpoint onto the
+       degraded mesh through the ``Repartition`` plan
+       (``restore_latest_verified(..., reshard=True)``), and resumes.
+
+    ``make_setup(factorization, devices, virtual_dp)`` returns
+    ``(mesh, make_state, step_fn, poisoned_step_fn)`` (the last may be
+    None); ``devices=None`` means the full device set.  Other recoverable
+    failures restart on the CURRENT (possibly already degraded) mesh.
+    Health adds ``mesh_shrinks`` to the usual counters.
+    """
+    from repro.launch.mesh import shrink_factorization, surviving_devices
+    from repro.resilience.inject import DeviceLossError
+
+    rng = _random.Random(seed)
+    history = History()
+    restarts = 0
+    data_offset = 0
+    fact = tuple(factorization)
+    devices = None
+    vdp = 1
+    while True:
+        mesh, make_state, step_fn, poisoned = make_setup(fact, devices, vdp)
+        train_step = (injector.rebind(step_fn, poisoned)
+                      if injector is not None else step_fn)
+        state = make_state()
+        start = 0
+        if loop_cfg.ckpt_dir:
+            got = ckpt_lib.restore_latest_verified(
+                loop_cfg.ckpt_dir, like=state, reshard=True, logger=logger)
+            if got is not None:
+                state, start, quarantined = got
+                history.health["quarantined_checkpoints"] += len(quarantined)
+                logger(f"resumed from checkpoint step {start}"
+                       + (f" (quarantined corrupt: {quarantined})"
+                          if quarantined else ""))
+        data_iter = make_data_iter(start + data_offset)
+        try:
+            return run(state, train_step, data_iter, loop_cfg, logger=logger,
+                       history=history, data_offset=data_offset)
+        except DeviceLossError as e:
+            restarts += 1
+            history.health["restarts"] += 1
+            history.health["mesh_shrinks"] += 1
+            survivors = surviving_devices(mesh, e.axis)
+            fact, fold = shrink_factorization(fact, e.axis)
+            if e.axis == "data":
+                vdp *= fold
+            want = 1
+            for f in fact:
+                want *= f
+            devices = survivors[:want]
+            logger(f"device loss on axis {e.axis!r}: shrinking to "
+                   f"(dp, S, cp, tp, ep) = {fact} over {len(devices)} "
+                   f"device(s), virtual_dp={vdp} "
+                   f"(restart {restarts}/{max_restarts})")
+            if restarts >= max_restarts:
+                raise
+        except recoverable as e:
+            restarts += 1
+            history.health["restarts"] += 1
+            logger(f"failure: {e}; restart {restarts}/{max_restarts}")
+            if restarts >= max_restarts:
+                raise
+        delay = min(backoff_max, backoff_base * (2 ** (restarts - 1)))
+        delay *= 1.0 + backoff_jitter * rng.random()
+        history.health["backoff_seconds"] += delay
+        sleep(delay)

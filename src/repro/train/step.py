@@ -194,7 +194,8 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
                             num_microbatches: int, schedule: str = "1f1b",
                             max_grad_norm: float = 1.0,
                             aux_weight: float = 0.01,
-                            nonfinite_guard: bool = True, fault_hook=None):
+                            nonfinite_guard: bool = True, fault_hook=None,
+                            virtual_dp: int = 1):
     """Train step over the hybrid DP x pipe x ctx x tensor x expert mesh
     (DESIGN §5-6, §8).
 
@@ -238,6 +239,22 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
     does not divide by microbatches x dp x ep, the sequence does not
     divide by cp (the ``BatchScatter`` contract), or the experts do not
     divide by ep (models/moe.py).  Wrap in jax.jit.
+
+    ``virtual_dp`` (DESIGN §10) folds LOST data parallelism into grad
+    accumulation after an elastic mesh shrink: the step runs the executor
+    ``virtual_dp`` times, pass ``v`` consuming the contiguous per-replica
+    row block replica ``v*dp_live..`` owned on the ORIGINAL mesh (the
+    ``launch/specs.py::replica_assignment`` blocks), and combines
+    ``loss = (Σ loss_v)/virtual_dp`` / ``grads = (Σ g_v)/virtual_dp`` /
+    ``flag = max(flag_v)``.  Each pass is the same per-rank computation as
+    an original dp-rank's (same shard shapes, same ctx/tp collectives),
+    the combination mirrors the lost axis' tree-structured psum, and the
+    scale shift ``1/(M·dp_live) -> 1/(M·dp_live·virtual_dp)`` is a
+    power-of-two factor that commutes with fp rounding for the standard
+    power-of-two factorizations — so the degraded step reproduces the
+    original mesh's fp32 loss and gradients BITWISE (asserted in
+    tests/md/test_elastic_md.py), keeping the global batch schedule
+    identical across the shrink.
     """
     pvg, sched = build_hybrid_value_and_grad(
         cfg, policy, num_microbatches=num_microbatches, schedule=schedule,
@@ -248,14 +265,20 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
     dp = policy.axis_size(data_axis) if data_axis else 1
     cp = policy.ctx_size
     ep = policy.ep_size
+    vdp = max(int(virtual_dp), 1)
+
+    def run_pvg(params, mbs):
+        """The executor over one virtual replica's (M, rows, S) block."""
+        return pvg(params, {"tokens": mbs["tokens"]}, mbs["labels"])
 
     def train_step(state, batch):
         params = state["params"]
         M = num_microbatches
-        if batch["tokens"].shape[0] % (M * dp * ep):
+        if batch["tokens"].shape[0] % (M * dp * vdp * ep):
             raise ValueError(
                 f"global batch {batch['tokens'].shape[0]} not divisible by "
-                f"num_microbatches x dp x ep = {M} x {dp} x {ep}")
+                f"num_microbatches x dp x virtual_dp x ep = "
+                f"{M} x {dp} x {vdp} x {ep}")
         if batch["tokens"].shape[-1] % cp:
             raise ValueError(
                 f"sequence length {batch['tokens'].shape[-1]} not divisible "
@@ -263,7 +286,20 @@ def build_hybrid_train_step(cfg, policy, optimizer, *,
                 f"trailing positions")
         mbs = jax.tree_util.tree_map(
             lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
-        out = pvg(params, {"tokens": mbs["tokens"]}, mbs["labels"])
+        if vdp == 1:
+            out = run_pvg(params, mbs)
+        else:
+            rows = mbs["tokens"].shape[1] // vdp
+            outs = [run_pvg(params, jax.tree_util.tree_map(
+                        lambda x: x[:, v * rows:(v + 1) * rows], mbs))
+                    for v in range(vdp)]
+            loss = sum(o[0] for o in outs) / vdp
+            grads = jax.tree_util.tree_map(
+                lambda *gs: sum(gs) / vdp, *(o[1] for o in outs))
+            out = (loss, grads)
+            if nonfinite_guard:
+                from repro.resilience.guard import combine_flags
+                out = (loss, grads, combine_flags(*(o[2] for o in outs)))
         loss, grads = out[0], out[1]
         gnorm = global_norm(grads)
         scale = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-12))

@@ -38,6 +38,13 @@ CONCRETE_OPS = [
     (linop.HaloExchange(AX, 0,
                         left_widths=(0, 1, 2, 0, 1, 2, 0, 1),
                         right_widths=(1, 0, 2, 1, 0, 2, 1, 0)), (32, 2)),
+    # Repartition (DESIGN §10): every single-axis layout pair — scatter
+    # (replicated -> stacked), gather (stacked -> replicated), dim move
+    # (AllToAll), and the same-layout identity
+    (linop.Repartition(linop.Layout(None), linop.Layout(AX, 0)), (16, 3)),
+    (linop.Repartition(linop.Layout(AX, 1), linop.Layout(None)), (3, 16)),
+    (linop.Repartition(linop.Layout(AX, 0), linop.Layout(AX, 1)), (8, 8)),
+    (linop.Repartition(linop.Layout(AX, 0), linop.Layout(AX, 0)), (16, 3)),
 ]
 
 
@@ -93,6 +100,15 @@ COMPOSITES = [
     # adjoint (the reverse all-to-all)
     (linop.AllToAll(AX, 1, 0) @ linop.AllToAll(AX, 0, 1)
      @ linop.CapacityRestrict(0, 8, 9) @ linop.BatchScatter(AX, 1), (9, 64)),
+    # the elastic reshard round trip (DESIGN §10): carry a dim-0-stacked
+    # leaf to dim-1-stacked and back — R(b,a) @ R(a,b) = I, and the chain
+    # is its own adjoint family under reversal
+    (linop.Repartition(linop.Layout(AX, 1), linop.Layout(AX, 0))
+     @ linop.Repartition(linop.Layout(AX, 0), linop.Layout(AX, 1)), (8, 8)),
+    # checkpoint restore onto a bigger/smaller mesh factors through the
+    # replicated layout: gather the source layout, scatter the target
+    (linop.Repartition(linop.Layout(None), linop.Layout(AX, 1))
+     @ linop.Repartition(linop.Layout(AX, 0), linop.Layout(None)), (8, 8)),
 ]
 
 
@@ -121,6 +137,30 @@ def test_reversal_law_structural():
     assert (linop.CapacityRestrict(0, 6, 9).T
             == linop.CapacityRestrict(0, 6, 9, embed=True))
     assert linop.CapacityRestrict(0, 6, 9).T.T == linop.CapacityRestrict(0, 6, 9)
+    # Repartition: adjoint = the REVERSE repartition (DESIGN §10)
+    a, b = linop.Layout(AX, 0), linop.Layout(AX, 1)
+    assert linop.Repartition(a, b).T == linop.Repartition(b, a)
+    assert linop.Repartition(a, b).T.T == linop.Repartition(a, b)
+    assert (linop.Repartition(linop.Layout(None), a).T
+            == linop.Repartition(a, linop.Layout(None)))
+    # replicated layouts are structurally dim-less: Layout(None, d) folds
+    assert linop.Layout(None, 3) == linop.Layout(None)
+
+
+def test_repartition_cross_axis_pieces(mesh8):
+    """A data-axis -> model-axis repartition on the 2-D (2, 4) mesh: the
+    piece decomposition is scatter-after-gather on DIFFERENT axes, and the
+    composite still passes Eq. 13 (the typechecker handles the junction —
+    see tests/test_spaces.py)."""
+    src = linop.Layout("data", 0)
+    dst = linop.Layout("model", 1)
+    op = linop.Repartition(src, dst)
+    assert op.pieces() == (linop.BatchScatter("model", 1),
+                           linop.GradSumReduce("data", 0))
+    r = check_adjoint(op, mesh8, (8, 8))
+    assert r.passed, r
+    r = check_adjoint(op.T, mesh8, (8, 8))
+    assert r.passed, r
 
 
 def _random_chain(rng, n_ops: int, local0: int):

@@ -145,26 +145,52 @@ from repro import compat
 from repro.checkpoint import ckpt as ckpt_lib
 
 d = "{dir}"
-# save on a (4,) mesh
+# save on a (4,) mesh — the manifest records mesh factorization + specs
 mesh_a = compat.make_mesh((4,), ("model",))
 arr = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                      NamedSharding(mesh_a, P("model", None)))
 ckpt_lib.save(d, 1, {{"w": arr}})
+import json
+man = json.load(open(d + "/step_00000001/manifest.json"))
+assert man["mesh"] == {{"model": 4}}, man["mesh"]
+assert man["leaves"][0]["spec"] == ["model", None], man["leaves"][0]
 
-# restore on a DIFFERENT mesh shape (2, 2): the elastic-scaling path
+# a DIFFERENT mesh shape (2, 2): plain restore is a targeted error
+# pointing at the elastic path, not a late shape/sharding surprise
 mesh_b = compat.make_mesh((2, 2), ("data", "model"))
 like = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
 shd = {{"w": NamedSharding(mesh_b, P("data", "model"))}}
-restored, step = ckpt_lib.restore(d, like=like, shardings=shd)
+try:
+    ckpt_lib.restore(d, like=like, shardings=shd)
+    raise SystemExit("plain cross-mesh restore must raise")
+except ckpt_lib.MeshMismatchError as e:
+    assert "restore_resharded" in str(e)
+
+# restore_resharded carries each leaf across on a Repartition plan
+plans = ckpt_lib.plan_reshard(d, shd)
+assert plans[0].src == ckpt_lib.linop.Layout("model", 0), plans
+restored, step = ckpt_lib.restore_resharded(d, shd)
 np.testing.assert_array_equal(np.asarray(restored["w"]),
                               np.arange(64.0).reshape(8, 8))
 assert restored["w"].sharding.spec == P("data", "model")
+
+# same-mesh plain restore keeps working
+shd_same = {{"w": NamedSharding(mesh_a, P("model", None))}}
+restored, step = ckpt_lib.restore(d, like=like, shardings=shd_same)
+np.testing.assert_array_equal(np.asarray(restored["w"]),
+                              np.arange(64.0).reshape(8, 8))
+
+# ...and a single-host replicated landing (mesh-shrink to 1 device)
+r1, _ = ckpt_lib.restore_resharded(d, None, like=like)
+np.testing.assert_array_equal(np.asarray(r1["w"]),
+                              np.arange(64.0).reshape(8, 8))
 print("ELASTIC_OK")
 """
 
 
 def test_elastic_restore_across_meshes(tmp_path):
-    """Save sharded on mesh (4,), restore sharded on mesh (2,2)."""
+    """Save sharded on mesh (4,); plain restore on (2,2) raises
+    MeshMismatchError; restore_resharded carries the state across."""
     src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
     script = ELASTIC_SCRIPT.format(src=src, dir=str(tmp_path))
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,

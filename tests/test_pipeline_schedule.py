@@ -294,3 +294,33 @@ def test_make_hybrid_mesh_cp_binds_policy():
     assert pol.phys("ctx") is None                 # degenerate resolution
     # "seq" keeps its SP seq->model overload without a ctx axis
     assert Policy(mesh=make_hybrid_mesh(1, 1, tp=1)).phys("seq") == "model"
+
+
+def test_make_hybrid_mesh_oversubscription_and_shrink():
+    """The elastic supervisor's two pure helpers (DESIGN §10), device-free:
+    a factorization wanting more devices than exist raises a ValueError
+    naming both counts (the probe the supervisor runs while searching for
+    the largest legal degraded mesh), and shrink_factorization returns the
+    largest remaining divisor plus the fold multiplier."""
+    import jax
+
+    from repro.launch.mesh import make_hybrid_mesh, shrink_factorization
+
+    # this process has >= 1 device; dp*S = 16 oversubscribes it
+    with pytest.raises(ValueError, match="oversubscribes"):
+        make_hybrid_mesh(4, 4)
+    with pytest.raises(ValueError, match="2x1x2x2x1 = 8"):
+        make_hybrid_mesh(2, 1, 2, 2, devices=jax.devices()[:1])
+
+    # degree 4 with one device slice short -> largest divisor 2, fold 2
+    assert shrink_factorization((4, 1, 1, 2, 1), "data") == (
+        (2, 1, 1, 2, 1), 2)
+    # degree 3 has no divisor but 1: fold the whole axis away
+    assert shrink_factorization((2, 1, 3, 1, 1), "ctx") == (
+        (2, 1, 1, 1, 1), 3)
+    assert shrink_factorization((1, 1, 1, 2, 1), "model") == (
+        (1, 1, 1, 1, 1), 2)
+    with pytest.raises(ValueError, match="degree 1"):
+        shrink_factorization((1, 2, 1, 1, 1), "data")
+    with pytest.raises(ValueError, match="unknown mesh axis"):
+        shrink_factorization((2, 1, 1, 1, 1), "rows")

@@ -144,10 +144,15 @@ def test_fault_plan_parse():
     assert p.corrupt_on_crash and p.corrupt_mode == "truncate"
     assert p.slow_at == (4,) and p.slow_seconds == 0.2
     assert p.seed == 1 and not p.once
+    assert FaultPlan.parse("shrink=6:data").shrink_at == ((6, "data"),)
+    assert (FaultPlan.parse("shrink=6:data+9:ctx").shrink_at
+            == ((6, "data"), (9, "ctx")))
     with pytest.raises(ValueError):
         FaultPlan.parse("corrupt=scribble")
     with pytest.raises(ValueError):
         FaultPlan.parse("frobnicate=1")
+    with pytest.raises(ValueError, match="step:axis"):
+        FaultPlan.parse("shrink=6")
 
 
 def test_injector_fire_once_semantics(rig):

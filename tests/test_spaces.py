@@ -38,7 +38,9 @@ def _old_moves(k, space):
     plus the PR-7 CapacityRestrict rows (replicated space only — the op
     typechecks everywhere, but its canonical boundary specs are replicated,
     so the generator only offers it where a lifted chain can start or end
-    with it; embeds growth-capped)."""
+    with it; embeds growth-capped) and the PR-10 Repartition rows (scatter
+    in from replicated, gather out to replicated, dim move — legal exactly
+    where their single-axis piece decompositions are)."""
     sig = None if space.kind == "replicated" else space.dim
     ls = list(space.local_shape)
     rank = len(ls)
@@ -48,6 +50,9 @@ def _old_moves(k, space):
         for d in range(rank):
             if ls[d] % k == 0:
                 mv.append(("batch_scatter", d))
+        for d in range(rank):
+            if ls[d] % k == 0:
+                mv.append(("repartition_in", d))
     else:
         d = sig
         if d == 0:
@@ -63,6 +68,11 @@ def _old_moves(k, space):
         for s in range(rank):
             if s != d and ls[s] % k == 0 and ls[d] * k <= MAX_DIM:
                 mv.append(("all_to_all", s))
+        if ls[d] * k <= MAX_DIM:
+            mv.append(("repartition_out", None))
+        for s in range(rank):
+            if s != d and ls[s] % k == 0 and ls[d] * k <= MAX_DIM:
+                mv.append(("repartition_move", s))
         for left, right in ((0, 1), (1, 0), (1, 1), (2, 1), (2, 2)):
             if ls[d] >= max(left, right) and ls[d] + left + right <= MAX_DIM:
                 mv.append(("halo", (left, right)))
@@ -178,6 +188,48 @@ def test_capacity_restrict_signature_on_ep():
     dispatch = linop.AllToAll("ep", 0, 1) @ linop.CapacityRestrict(0, 8, 9)
     tr = spaces.typecheck(dispatch, sz, Space.stacked("ep", 1, (9, 5)))
     assert tr.out_space == Space.stacked("ep", 0, (2, 20))
+
+
+def test_repartition_signature_and_negatives():
+    """Repartition typing (DESIGN §10): src layout must match the incoming
+    space EXACTLY (axis and dim); the codomain is the dst layout's space;
+    the adjoint is the reverse repartition; mismatches are targeted
+    SpaceTypeErrors."""
+    sz = {AX: 4, "data": 2}
+    a, b = linop.Layout(AX, 0), linop.Layout(AX, 1)
+    rep = linop.Layout(None)
+    # scatter in: replicated -> stacked, dim 0 split 4-ways
+    tr = spaces.typecheck(linop.Repartition(rep, a), {AX: 4},
+                          Space.replicated((8, 6)))
+    assert tr.out_space == Space.stacked(AX, 0, (2, 6))
+    # dim move: stacked dim 0 -> dim 1 (the AllToAll piece)
+    tr = spaces.typecheck(linop.Repartition(a, b), {AX: 4},
+                          Space.stacked(AX, 0, (2, 8)))
+    assert tr.out_space == Space.stacked(AX, 1, (8, 2))
+    # gather out: stacked -> replicated (global extent restored)
+    tr = spaces.typecheck(linop.Repartition(b, rep), {AX: 4},
+                          Space.stacked(AX, 1, (8, 2)))
+    assert tr.out_space == Space.replicated((8, 8))
+    # adjoint = reverse repartition, and it round-trips the signature
+    assert linop.Repartition(a, b).T == linop.Repartition(b, a)
+    back = linop.Repartition(a, b).T.space_map(
+        Space.stacked(AX, 1, (8, 2)), {AX: 4})
+    assert back == Space.stacked(AX, 0, (2, 8))
+    # cross-axis (elastic reshard): data-stacked -> model-stacked
+    tr = spaces.typecheck(
+        linop.Repartition(linop.Layout("data", 0), linop.Layout(AX, 1)),
+        sz, Space.stacked("data", 0, (4, 8)))
+    assert tr.out_space == Space.stacked(AX, 1, (8, 2))
+    # negatives: wrong source kind, wrong source dim, indivisible scatter
+    with pytest.raises(SpaceTypeError):
+        spaces.typecheck(linop.Repartition(a, rep), {AX: 4},
+                         Space.replicated((8, 6)))
+    with pytest.raises(SpaceTypeError):
+        spaces.typecheck(linop.Repartition(a, rep), {AX: 4},
+                         Space.stacked(AX, 1, (8, 2)))
+    with pytest.raises(SpaceTypeError):
+        spaces.typecheck(linop.Repartition(rep, a), {AX: 4},
+                         Space.replicated((5, 6)))
 
 
 def test_dispatch_after_combine_junction_rejected():
